@@ -1,0 +1,32 @@
+"""Paper Figure 14: effect of attribute dimension d at fixed n = 2^12.
+
+Runtime is flat for d <= log2(n) and grows exponentially beyond (the KPGM
+draws live in config space 2^d; see paper section 4.2)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import THETA_1, emit, time_call
+from repro.core import magm, quilt
+
+
+def run(log_n: int = 12) -> None:
+    n = 2**log_n
+    for d in range(6, log_n + 3):  # past log2(n) by 2 to show the blow-up
+        params = magm.make_params(THETA_1, 0.5, d)
+        F = np.asarray(
+            magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
+        )
+        t = time_call(
+            lambda params=params, F=F, d=d: quilt.quilt_sample_fast(
+                jax.random.PRNGKey(300 + d), params, F, seed=d
+            ),
+            repeats=1,
+        )
+        emit(f"fig14_d{d}_n{n}", t, f"log2n={log_n};past_log2n={d > log_n}")
+
+
+if __name__ == "__main__":
+    run()

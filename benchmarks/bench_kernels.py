@@ -1,0 +1,81 @@
+"""Kernel-level benchmarks: Pallas (interpret) vs jnp reference + analytic
+roofline terms for the two sampler kernels on TPU v5e constants.
+
+Wall-times on CPU interpret mode are NOT TPU projections — the derived
+column carries the analytic VMEM/HBM roofline instead (bytes-per-edge and
+arithmetic intensity), which is hardware math, not measurement."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import THETA_1, emit, time_call
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.core import magm
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    d = 20
+    thetas = jnp.asarray(np.broadcast_to(THETA_1, (d, 2, 2)).copy())
+    n_edges = 1 << 14
+
+    # quadrant descent: bytes/edge = 4d (uniform read) + 8 (ids out)
+    bytes_per_edge = 4 * d + 8
+    tpu_edge_rate = HBM_BW / bytes_per_edge
+    t = time_call(
+        lambda: jax.block_until_ready(
+            ops.sample_edge_batch_pallas(jax.random.PRNGKey(0), thetas, n_edges)
+        )
+    )
+    emit(
+        "kernel_quadrant_descent_interp", t,
+        f"edges={n_edges};tpu_roofline_edges_per_s={tpu_edge_rate:.3e};"
+        f"bytes_per_edge={bytes_per_edge}",
+    )
+
+    flat = thetas.reshape(-1, 4)
+    cum = jnp.cumsum(flat / flat.sum(1, keepdims=True), axis=1)
+    u = jax.random.uniform(jax.random.PRNGKey(1), (n_edges, d))
+    t_ref = time_call(
+        lambda: jax.block_until_ready(ref.quadrant_descent_ref(u, cum))
+    )
+    emit("kernel_quadrant_descent_ref_jnp", t_ref, "")
+
+    # MAGM bilinear log-prob tile: matmul intensity 2*M*N*K / traffic
+    m = nq = 1024
+    mu = jnp.full((d,), 0.5)
+    F1 = magm.sample_attributes(jax.random.PRNGKey(2), m, mu)
+    F2 = magm.sample_attributes(jax.random.PRNGKey(3), nq, mu)
+    flops = 2 * m * nq * 128  # padded contraction dim
+    traffic = (m * 128 + nq * 128) * 4 + m * nq * 4
+    intensity = flops / traffic
+    t_k = time_call(
+        lambda: jax.block_until_ready(ops.magm_logprob_pallas(F1, F2, thetas))
+    )
+    t_r = time_call(
+        lambda: jax.block_until_ready(magm.log_edge_prob(F1, F2, thetas))
+    )
+    tpu_t = max(flops / PEAK_FLOPS, traffic / HBM_BW)
+    emit(
+        "kernel_magm_logprob_interp", t_k,
+        f"arith_intensity={intensity:.1f};tpu_time_1Mtile={tpu_t * 1e6:.1f}us",
+    )
+    emit("kernel_magm_logprob_ref_jnp", t_r, "")
+
+    # fused Bernoulli tile: per-cell traffic 1B out vs 8B unfused
+    t_b = time_call(
+        lambda: jax.block_until_ready(
+            ops.bernoulli_sample_pallas(jax.random.PRNGKey(4), F1, F2, thetas)
+        )
+    )
+    emit(
+        "kernel_bernoulli_tile_interp", t_b,
+        "fused_traffic_cut=2.6x_vs_unfused(DESIGN 3.2)",
+    )
+
+
+if __name__ == "__main__":
+    run()

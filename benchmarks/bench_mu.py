@@ -1,0 +1,42 @@
+"""Paper Figures 12 & 13: relative running time rho(mu) = T(mu)/T(0.5) and
+rho_max vs n."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import THETA_1, THETA_2, emit, time_call
+from repro.core import magm, quilt
+
+
+def _t(theta, mu, d) -> float:
+    n = 2**d
+    params = magm.make_params(theta, mu, d)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(int(mu * 100)), n, params.mu)
+    )
+    return time_call(
+        lambda: quilt.quilt_sample_fast(
+            jax.random.PRNGKey(d), params, F, seed=int(mu * 10)
+        ),
+        repeats=1,
+    )
+
+
+def run(ds=(10, 12)) -> None:
+    mus = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    for theta, tname in ((THETA_1, "theta1"), (THETA_2, "theta2")):
+        for d in ds:
+            t_base = _t(theta, 0.5, d)
+            rho_max = 0.0
+            for mu in mus:
+                t = _t(theta, mu, d)
+                rho = t / max(t_base, 1e-9)
+                rho_max = max(rho_max, rho)
+                emit(f"fig12_rho_{tname}_d{d}_mu{mu}", t, f"rho={rho:.2f}")
+            emit(f"fig13_rhomax_{tname}_n{2**d}", rho_max, "")
+
+
+if __name__ == "__main__":
+    run()

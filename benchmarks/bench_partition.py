@@ -1,0 +1,64 @@
+"""Paper Figures 5, 6, 7: partition size B vs n for balanced/unbalanced mu,
+and the attribute-configuration frequency profile."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import magm, partition
+
+
+def run(max_d: int = 16) -> None:
+    # Fig 5: mu = 0.5 — B should stay below log2(n) w.h.p. (Theorem 4)
+    for d in range(8, max_d + 1):
+        n = 2**d
+        bs = []
+        for trial in range(5):
+            params = magm.make_params(
+                np.eye(2, dtype=np.float32), 0.5, d
+            )  # theta irrelevant for B
+            F = np.asarray(
+                magm.sample_attributes(
+                    jax.random.PRNGKey(d * 10 + trial), n, params.mu
+                )
+            )
+            lam = np.asarray(magm.configs_from_attributes(F))
+            bs.append(partition.min_partition_size(lam))
+        emit(
+            f"fig5_B_mu0.5_n{n}", float(np.mean(bs)),
+            f"log2n={d};bound_ok={np.mean(bs) <= d}",
+        )
+
+    # Fig 6: unbalanced mu — B approaches n*mu^d for large mu
+    for mu in (0.55, 0.6, 0.7, 0.9):
+        for d in (10, 12, 14):
+            n = 2**d
+            params = magm.make_params(np.eye(2, dtype=np.float32), mu, d)
+            F = np.asarray(
+                magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
+            )
+            lam = np.asarray(magm.configs_from_attributes(F))
+            b = partition.min_partition_size(lam)
+            emit(
+                f"fig6_B_mu{mu}_n{n}", float(b),
+                f"n_mu_d={n * mu ** d:.1f};log2n={d}",
+            )
+
+    # Fig 7: configuration frequency rank profile at d=15
+    d, n = 15, 2**15
+    for mu in (0.5, 0.6, 0.7, 0.9):
+        params = magm.make_params(np.eye(2, dtype=np.float32), mu, d)
+        F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(7), n, params.mu))
+        lam = np.asarray(magm.configs_from_attributes(F))
+        _, counts = np.unique(lam, return_counts=True)
+        counts = np.sort(counts)[::-1]
+        emit(
+            f"fig7_freq_mu{mu}", float(counts[0]),
+            f"top10={counts[:10].tolist()};distinct={counts.size}",
+        )
+
+
+if __name__ == "__main__":
+    run()

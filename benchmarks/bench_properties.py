@@ -1,0 +1,34 @@
+"""Paper Figures 8 & 9: |E| = n^c growth and largest-SCC fraction -> 1."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import THETA_1, THETA_2, emit
+from repro.core import magm, quilt, stats
+
+
+def run(max_d: int = 13) -> None:
+    for theta, tname in ((THETA_1, "theta1"), (THETA_2, "theta2")):
+        ns, es = [], []
+        for d in range(8, max_d + 1):
+            n = 2**d
+            params = magm.make_params(theta, 0.5, d)
+            F = np.asarray(
+                magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
+            )
+            edges = quilt.quilt_sample_fast(
+                jax.random.PRNGKey(50 + d), params, F, seed=d
+            )
+            scc = stats.largest_scc_fraction(edges, n)
+            ns.append(n)
+            es.append(max(edges.shape[0], 1))
+            emit(f"fig8_edges_{tname}_n{n}", float(edges.shape[0]), f"scc_frac={scc:.3f}")
+            emit(f"fig9_scc_{tname}_n{n}", float(scc), f"edges={edges.shape[0]}")
+        c = stats.fit_powerlaw_exponent(np.array(ns), np.array(es))
+        emit(f"fig8_exponent_{tname}", float(c), "paper: |E| ~ n^c, c>1")
+
+
+if __name__ == "__main__":
+    run()

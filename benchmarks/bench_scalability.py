@@ -1,0 +1,51 @@
+"""Paper Figures 10 & 11: quilting vs naive runtime as n grows, and
+per-edge runtime (quilting should be ~constant per edge)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import THETA_1, THETA_2, emit, time_call
+from repro.core import magm, naive, quilt
+
+NAIVE_MAX_D = 11  # the paper's naive scheme dies around 2^18; we cap sooner
+
+
+def run(max_d: int = 13) -> None:
+    for theta, tname in ((THETA_1, "theta1"), (THETA_2, "theta2")):
+        for d in range(8, max_d + 1):
+            n = 2**d
+            params = magm.make_params(theta, 0.5, d)
+            F = np.asarray(
+                magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
+            )
+            holder = {}
+
+            def quilted(F=F, params=params, d=d):
+                holder["edges"] = quilt.quilt_sample_fast(
+                    jax.random.PRNGKey(1000 + d), params, F, seed=d
+                )
+
+            t_q = time_call(quilted, repeats=1)
+            e = max(holder["edges"].shape[0], 1)
+            emit(
+                f"fig10_quilt_{tname}_n{n}", t_q,
+                f"edges={e};us_per_edge={t_q * 1e6 / e:.2f}",
+            )
+            emit(f"fig11_quilt_per_edge_{tname}_n{n}", t_q / e, f"edges={e}")
+            if d <= NAIVE_MAX_D:
+                t_n = time_call(
+                    lambda F=F, params=params, d=d: naive.naive_sample(
+                        jax.random.PRNGKey(2000 + d), params, F, tile=1024
+                    ),
+                    repeats=1,
+                )
+                emit(
+                    f"fig10_naive_{tname}_n{n}", t_n,
+                    f"speedup={t_n / max(t_q, 1e-9):.1f}x",
+                )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV emission, paper Theta matrices."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+THETA_1 = np.array([[0.15, 0.70], [0.70, 0.85]], dtype=np.float32)
+THETA_2 = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
+
+
+def time_call(fn: Callable, *, repeats: int = 3) -> float:
+    """Median wall-time of fn() in seconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name, us_per_call, derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Figure map: bench_partition (Figs 5-7), bench_properties (Figs 8-9),
+bench_scalability (Figs 10-11), bench_mu (Figs 12-13), bench_d (Fig 14),
+bench_kernels (Pallas kernel rooflines).
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sweeps")
+    ap.add_argument("--only", default=None, help="run a single bench module")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_d,
+        bench_kernels,
+        bench_mu,
+        bench_partition,
+        bench_properties,
+        bench_scalability,
+    )
+
+    print("name,us_per_call,derived")
+    suites = {
+        "partition": lambda: bench_partition.run(max_d=12 if args.fast else 16),
+        "properties": lambda: bench_properties.run(max_d=11 if args.fast else 13),
+        "scalability": lambda: bench_scalability.run(max_d=11 if args.fast else 13),
+        "mu": lambda: bench_mu.run(ds=(10,) if args.fast else (10, 12)),
+        "d": lambda: bench_d.run(log_n=10 if args.fast else 12),
+        "kernels": bench_kernels.run,
+    }
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Quickstart: sample a MAGM graph with the quilting algorithm and inspect it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import magm, quilt, stats
+
+# the paper's Theta_1 (Kim & Leskovec 2010), mu = 0.5, n = 2^12
+THETA = np.array([[0.15, 0.70], [0.70, 0.85]], dtype=np.float32)
+D = 12
+N = 2**D
+
+params = magm.make_params(THETA, mu=0.5, d=D)
+F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), N, params.mu))
+
+edges, info = quilt.quilt_sample_fast(
+    jax.random.PRNGKey(1), params, F, return_stats=True
+)
+
+out_deg, in_deg = stats.degree_counts(edges, N)
+print(f"nodes                 : {N}")
+print(f"edges                 : {edges.shape[0]}")
+print(f"expected edges        : {magm.expected_edges(params, N):.0f}")
+print(f"partition size B      : {info.B}  (log2 n = {D})")
+print(f"KPGM draws quilted    : {info.num_kpgm_draws}")
+print(f"heavy config groups   : {info.heavy_groups}")
+print(f"max out-degree        : {out_deg.max()}")
+print(f"largest SCC fraction  : {stats.largest_scc_fraction(edges, N):.3f}")

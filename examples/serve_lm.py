@@ -1,0 +1,13 @@
+"""Serving example: prefill + greedy decode on a reduced qwen3 (qk-norm GQA).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-14b", "--smoke",
+                "--batch", "2", "--prompt-len", "32", "--gen", "12"] + sys.argv[1:]
+    serve.main()

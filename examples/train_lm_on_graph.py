@@ -1,0 +1,17 @@
+"""End-to-end driver: train a reduced LM on random walks over a quilted MAGM
+graph, with fault-tolerant checkpointing (the framework's full train path).
+
+    PYTHONPATH=src python examples/train_lm_on_graph.py [--steps 200]
+
+Equivalent to:  python -m repro.launch.train --arch olmo-1b --smoke ...
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "olmo-1b", "--smoke",
+                "--steps", "200", "--batch", "8", "--seq", "64",
+                "--graph-nodes", "1024", "--lr", "1e-3"] + sys.argv[1:]
+    train.main()

@@ -1,0 +1,4 @@
+"""QKG: quilted Kronecker graph sampling (Yun & Vishwanathan, AISTATS 2012)
+as a first-class feature of a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Dry-run analysis: loop-aware HLO cost model and roofline derivation."""
+
+from repro.analysis import hlo_cost, roofline
+
+__all__ = ["hlo_cost", "roofline"]

@@ -1,0 +1,219 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  collective_bytes
+is parsed out of the (partitioned) HLO text: the summed result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one 'dtype[dims]' or tuple '(a, b)' result string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer bytes per collective kind from HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z\-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float  # per-chip GFLOPs (partitioned module)
+    hlo_gbytes: float  # per-chip GB accessed
+    coll_gbytes: float  # per-chip GB through collectives
+    coll_breakdown: Dict[str, int]
+    model_gflops: float  # 6*N*D (or 6*N_active*D) useful flops per chip
+    min_gbytes: float  # unavoidable per-chip HBM traffic (params + cache)
+    peak_bytes_per_chip: Optional[float]  # memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_gflops * 1e9 / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_gbytes * 1e9 / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_gbytes * 1e9 / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_gflops / max(self.hlo_gflops, 1e-9)
+
+    @property
+    def t_ideal(self) -> float:
+        """Best achievable step time: useful flops at peak MXU OR the
+        unavoidable HBM stream (weights + KV/SSM cache — dominant for
+        decode), whichever is larger."""
+        return max(
+            self.model_gflops * 1e9 / PEAK_FLOPS,
+            self.min_gbytes * 1e9 / HBM_BW,
+        )
+
+    @property
+    def roofline_fraction(self) -> float:
+        """t_ideal / modeled step time (max of the three terms, i.e. assuming
+        perfect compute/memory/collective overlap — optimistic on the step,
+        so the fraction is a lower bound on achievable efficiency)."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_ideal / max(t_step, 1e-12)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops_per_chip": self.hlo_gflops,
+            "hlo_gbytes_per_chip": self.hlo_gbytes,
+            "coll_gbytes_per_chip": self.coll_gbytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_gflops_per_chip": self.model_gflops,
+            "min_gbytes_per_chip": self.min_gbytes,
+            "t_ideal_s": self.t_ideal,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+        }
+
+
+def model_flops(cfg, shape, *, chips: int) -> float:
+    """Useful GFLOPs per chip: 6·N·D training, 2·N·D per forward token.
+
+    N = active params (MoE counts routed experts only); D = tokens processed
+    by the step (decode: batch tokens; prefill: B*S)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n_active * tokens / chips / 1e9
+
+
+def model_min_bytes(cfg, shape, *, chips: int) -> float:
+    """Unavoidable per-chip HBM GB per step: weights (read once) plus, for
+    decode, the full KV/SSM cache stream.  MoE decode still reads every
+    expert's weights (a 128-sequence batch touches all experts w.h.p.)."""
+    pbytes = cfg.param_count() * 2.0  # bf16 weights
+    cbytes = 0.0
+    if shape.kind == "decode":
+        import numpy as _np
+
+        from repro.models import kvcache
+
+        import jax as _jax
+
+        cache = kvcache.init_cache(
+            cfg, shape.global_batch, shape.seq_len, abstract=True
+        )
+        for leaf in _jax.tree.leaves(cache):
+            cbytes += float(_np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return (pbytes + cbytes) / chips / 1e9
+
+
+def build(
+    arch: str,
+    shape,
+    cfg,
+    mesh_name: str,
+    chips: int,
+    cost: Dict,
+    hlo_text: str,
+    mem_bytes: Optional[float],
+) -> Roofline:
+    coll = collective_bytes(hlo_text)
+    return Roofline(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_gflops=float(cost.get("flops", 0.0)) / 1e9,
+        hlo_gbytes=float(cost.get("bytes accessed", 0.0)) / 1e9,
+        coll_gbytes=sum(coll.values()) / 1e9,
+        coll_breakdown=coll,
+        model_gflops=model_flops(cfg, shape, chips=chips),
+        min_gbytes=model_min_bytes(cfg, shape, chips=chips),
+        peak_bytes_per_chip=mem_bytes,
+    )
+
+
+def save_rows(path: str, rows) -> None:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

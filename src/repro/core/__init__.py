@@ -1,0 +1,13 @@
+"""Core library: the paper's contribution (quilted MAGM sampling) in JAX."""
+
+from repro.core import distributed, kpgm, magm, naive, partition, quilt, stats
+
+__all__ = [
+    "distributed",
+    "kpgm",
+    "magm",
+    "naive",
+    "partition",
+    "quilt",
+    "stats",
+]

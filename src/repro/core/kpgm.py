@@ -1,0 +1,241 @@
+"""Stochastic Kronecker Product Graph Model (KPGM), Leskovec et al. (2010).
+
+Edge probability matrix  P = Theta^(1) x Theta^(2) x ... x Theta^(d)
+(paper eq. 3) with 2x2 initiator matrices.  Equivalently (paper eq. 6)
+
+    P_ij = prod_k theta^(k)[b_k(i), b_k(j)]
+
+where b_k(i) is the k-th most significant bit of (i-1).  We use 0-based node
+ids throughout, so ``P[i, j] = prod_k theta^(k)[bit_k(i), bit_k(j)]``.
+
+Sampling (Algorithm 1 of the paper) is recast as a *batched tensor program*
+for TPU (see DESIGN.md section 3): all X candidate edges descend the d levels
+simultaneously as a (X, d) uniform tensor compared against per-level cumulative
+quadrant probabilities, and the resulting bit-planes are contracted against a
+powers-of-two vector to form integer node ids.  No scalar control flow.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KPGMParams(NamedTuple):
+    """Per-level 2x2 initiator matrices, shape (d, 2, 2), float32 in [0,1]."""
+
+    thetas: jax.Array
+
+    @property
+    def d(self) -> int:
+        return self.thetas.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return 1 << self.d
+
+
+def make_params(theta: np.ndarray, d: int) -> KPGMParams:
+    """Replicate one 2x2 initiator at every level (paper section 6 setup)."""
+    theta = np.asarray(theta, dtype=np.float32)
+    if theta.shape != (2, 2):
+        raise ValueError(f"initiator must be 2x2, got {theta.shape}")
+    if not ((theta >= 0).all() and (theta <= 1).all()):
+        raise ValueError("initiator entries must lie in [0, 1]")
+    return KPGMParams(jnp.asarray(np.broadcast_to(theta, (d, 2, 2)).copy()))
+
+
+def edge_moments(thetas: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean m and second-moment term v of |E| (Algorithm 1 lines 3-4).
+
+    m = prod_k sum(theta^(k)),  v = prod_k sum((theta^(k))^2); the number of
+    edges is approximately N(m, m - v).
+    """
+    m = jnp.prod(jnp.sum(thetas, axis=(1, 2)))
+    v = jnp.prod(jnp.sum(thetas**2, axis=(1, 2)))
+    return m, v
+
+
+def expected_edges(thetas: jax.Array) -> float:
+    return float(edge_moments(thetas)[0])
+
+
+def sample_num_edges(key: jax.Array, thetas: jax.Array) -> jax.Array:
+    """X ~ N(m, m - v) (Algorithm 1 line 5), clipped to >= 0 and rounded.
+
+    Returned as float32 (edge counts can exceed int32 at 20B-edge scale;
+    host callers convert with int())."""
+    m, v = edge_moments(thetas)
+    std = jnp.sqrt(jnp.maximum(m - v, 0.0))
+    x = m + std * jax.random.normal(key, ())
+    return jnp.maximum(jnp.round(x), 0.0)
+
+
+def _bucket(x: int) -> int:
+    """Smallest 2^k * {4,5,6,7}/4 >= x: geometric batch-size grid (ratio
+    <=1.25) so the jitted sampler compiles O(log n) programs while wasting
+    <=25%% of generated candidates (vs 2x for pure powers of two)."""
+    if x <= 64:
+        return 64
+    k = (x - 1).bit_length() - 3
+    base = 1 << k
+    for mult in (4, 5, 6, 7, 8):
+        if mult * base >= x:
+            return mult * base
+    return 8 * base
+
+
+def _level_cumprobs(thetas: jax.Array) -> jax.Array:
+    """(d, 4) cumulative quadrant probabilities, row-major (00, 01, 10, 11)."""
+    flat = thetas.reshape(-1, 4)
+    flat = flat / jnp.sum(flat, axis=1, keepdims=True)
+    return jnp.cumsum(flat, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_edges",))
+def sample_edge_batch(
+    key: jax.Array, thetas: jax.Array, num_edges: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Sample ``num_edges`` (src, dst) pairs by vectorised quadrant descent.
+
+    Each edge independently follows Algorithm 1 lines 7-16: at level k pick
+    quadrant (a, b) with probability proportional to theta^(k)_{ab}.  Returned
+    ids are 0-based in [0, 2^d).  Duplicates are possible (the caller
+    implements the paper's rejection by dedup + top-up).
+    """
+    d = thetas.shape[0]
+    if d > 31:
+        raise ValueError("node ids are int32 on device; require d <= 31")
+    cum = _level_cumprobs(thetas)  # (d, 4)
+    u = jax.random.uniform(key, (num_edges, d))
+    # quadrant index in {0,1,2,3}: count thresholds strictly below u.
+    quad = jnp.sum(u[:, :, None] >= cum[None, :, :3], axis=-1).astype(jnp.int32)
+    a = quad >> 1  # source bit-plane, (num_edges, d)
+    b = quad & 1  # target bit-plane
+    pows = (1 << jnp.arange(d - 1, -1, -1)).astype(jnp.int32)
+    src = a @ pows
+    dst = b @ pows
+    return src, dst
+
+
+def kpgm_sample(
+    key: jax.Array,
+    params: KPGMParams,
+    *,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    num_edges: Optional[int] = None,
+) -> np.ndarray:
+    """Sample a KPGM graph; returns unique (src, dst) int64 array of shape (E, 2).
+
+    Host-level orchestration of Algorithm 1: draw X ~ N(m, m-v), then draw
+    edge candidates in fixed-shape device batches, dedupe on host, and top up
+    until X unique edges are collected (the paper's rejection step).
+    """
+    thetas = params.thetas
+    d = params.d
+    n = params.num_nodes
+    key, sub = jax.random.split(key)
+    target = int(sample_num_edges(sub, thetas)) if num_edges is None else int(num_edges)
+    target = min(target, n * n)
+    if target == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+
+    # Dedup must preserve ARRIVAL order: np.unique sorts by value, and
+    # truncating a sorted list to the target count would bias kept edges
+    # toward low node ids (top-left of the adjacency matrix).
+    seen: np.ndarray = np.empty((0,), dtype=np.int64)
+    for _ in range(max_rounds):
+        need = target - seen.size
+        if need <= 0:
+            break
+        key, sub = jax.random.split(key)
+        # bucket the batch size to the next power of two: sample_edge_batch
+        # is jitted per static size, and per-call recompilation dominated the
+        # cold-path wall time (EXPERIMENTS.md Perf, sampler iteration 1:
+        # 22.0s cold -> 2.1s once sizes bucket into a handful of programs)
+        batch = _bucket(max(int(need * oversample) + 16, 64))
+        src, dst = sample_edge_batch(sub, thetas, batch)
+        flat = np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
+        flat = flat[: int(need * oversample) + 16]
+        _, first_idx = np.unique(flat, return_index=True)
+        in_order = flat[np.sort(first_idx)]
+        fresh = in_order[~np.isin(in_order, seen, assume_unique=True)]
+        seen = np.concatenate([seen, fresh])
+    seen = seen[:target] if seen.size > target else seen
+    return np.stack([seen // n, seen % n], axis=1)
+
+
+def kpgm_sample_many(
+    key: jax.Array,
+    params: KPGMParams,
+    count: int,
+    *,
+    max_rounds: int = 8,
+    oversample: float = 1.1,
+) -> list:
+    """Sample ``count`` independent KPGM graphs with SHARED device batches.
+
+    Algorithm 2 needs B^2 independent KPGM draws; issuing them one
+    kpgm_sample at a time pays per-call dispatch + top-up rounds B^2 times.
+    Candidates are iid, so one large batch partitioned DISJOINTLY across the
+    graphs preserves independence while amortising the device calls
+    (EXPERIMENTS.md Perf, sampler iteration 2)."""
+    thetas = params.thetas
+    n = params.num_nodes
+    key, sub = jax.random.split(key)
+    m, v = edge_moments(thetas)
+    std = float(jnp.sqrt(jnp.maximum(m - v, 0.0)))
+    draws = np.asarray(
+        jax.random.normal(sub, (count,)) * std + float(m)
+    )
+    targets = np.clip(np.round(draws), 0, n * n).astype(np.int64)
+
+    seen = [np.empty((0,), dtype=np.int64) for _ in range(count)]
+    for _ in range(max_rounds):
+        needs = [int(t - s.size) for t, s in zip(targets, seen)]
+        asks = [max(int(nd * oversample) + 16, 0) if nd > 0 else 0 for nd in needs]
+        total = sum(asks)
+        if total == 0:
+            break
+        key, sub = jax.random.split(key)
+        batch = _bucket(total)
+        src, dst = sample_edge_batch(sub, thetas, batch)
+        flat = np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
+        off = 0
+        for i, ask in enumerate(asks):
+            if ask == 0:
+                continue
+            chunk = flat[off : off + ask]
+            off += ask
+            _, first_idx = np.unique(chunk, return_index=True)
+            in_order = chunk[np.sort(first_idx)]
+            fresh = in_order[~np.isin(in_order, seen[i], assume_unique=True)]
+            seen[i] = np.concatenate([seen[i], fresh])[: targets[i]]
+    return [np.stack([s // n, s % n], axis=1) for s in seen]
+
+
+def edge_prob_matrix(thetas: jax.Array) -> jax.Array:
+    """Exact dense P = kron(theta_1, ..., theta_d).  Only for small d (tests)."""
+    d = thetas.shape[0]
+    p = thetas[0]
+    for k in range(1, d):
+        p = jnp.kron(p, thetas[k])
+    del d
+    return p
+
+
+def log_prob_pairs(thetas: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """log P_{src,dst} for 0-based id pairs, evaluated via eq. (6)."""
+    d = thetas.shape[0]
+    ks = jnp.arange(d)
+    shift = d - 1 - ks
+    a = (src[:, None] >> shift[None, :]) & 1  # (E, d)
+    b = (dst[:, None] >> shift[None, :]) & 1
+    logt = jnp.log(jnp.clip(thetas, 1e-30, 1.0))  # (d, 2, 2)
+    vals = logt[ks[None, :], a, b]
+    return jnp.sum(vals, axis=1)

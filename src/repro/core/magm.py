@@ -1,0 +1,140 @@
+"""Multiplicative Attribute Graph Model (MAGM), Kim & Leskovec (2010).
+
+Node i carries an attribute bit-vector f(i) with P(f_k(i)=1) = mu_k.  The edge
+probability is the product over attributes (paper eq. 7):
+
+    Q_ij = prod_k theta^(k)[f_k(i), f_k(j)]
+
+The *attribute configuration* lambda_i is the integer whose binary expansion
+is f(i); then Q_ij = P_{lambda_i, lambda_j} (paper eq. 8) where P is the KPGM
+edge probability matrix for the same thetas.
+
+TPU adaptation (DESIGN.md section 3.2): because a, b are bits,
+
+    log theta[a, b] = log t00 + a*(log t10 - log t00) + b*(log t01 - log t00)
+                      + a*b*(log t11 + log t00 - log t01 - log t10)
+
+so with F the (n, d) attribute matrix,
+
+    log Q = c0 + F u 1^T + 1 (F v)^T + F diag(w) F^T
+
+— a single rank-d matmul plus rank-1 corrections.  This turns the naive
+per-entry d-fold product into MXU work (kernels/magm_logprob.py tiles it).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MAGMParams(NamedTuple):
+    thetas: jax.Array  # (d, 2, 2) in [0, 1]
+    mu: jax.Array  # (d,) attribute Bernoulli means
+
+    @property
+    def d(self) -> int:
+        return self.thetas.shape[0]
+
+
+def make_params(theta: np.ndarray, mu, d: int) -> MAGMParams:
+    theta = np.asarray(theta, dtype=np.float32)
+    mu_arr = np.broadcast_to(np.asarray(mu, dtype=np.float32), (d,)).copy()
+    return MAGMParams(
+        jnp.asarray(np.broadcast_to(theta, (d, 2, 2)).copy()), jnp.asarray(mu_arr)
+    )
+
+
+def sample_attributes(key: jax.Array, n: int, mu: jax.Array) -> jax.Array:
+    """F in {0,1}^{n x d} with F[:, k] ~ Bernoulli(mu_k), int8."""
+    d = mu.shape[0]
+    u = jax.random.uniform(key, (n, d))
+    return (u < mu[None, :]).astype(jnp.int8)
+
+
+def configs_from_attributes(F: jax.Array) -> jax.Array:
+    """lambda_i = sum_k f_k(i) 2^(d-k): attribute-vector -> integer config.
+
+    f_1 is the most significant bit, matching KPGM's b_k(i) digit order so
+    that Q_ij = P_{lambda_i, lambda_j} holds entrywise (paper eq. 8).
+    """
+    d = F.shape[1]
+    if d > 31:
+        raise ValueError("configs are int32 on device; require d <= 31 "
+                         "(use numpy int64 on host for larger d)")
+    pows = (1 << jnp.arange(d - 1, -1, -1)).astype(jnp.int32)
+    return F.astype(jnp.int32) @ pows
+
+
+def attributes_from_configs(lam: jax.Array, d: int) -> jax.Array:
+    """Inverse of :func:`configs_from_attributes`."""
+    shift = d - 1 - jnp.arange(d)
+    return ((lam[:, None] >> shift[None, :]) & 1).astype(jnp.int8)
+
+
+class BilinearLogTheta(NamedTuple):
+    """log Q decomposition:  logQ = c0 + F u 1^T + 1 (F v)^T + F diag(w) F^T."""
+
+    c0: jax.Array  # scalar: sum_k log t00
+    u: jax.Array  # (d,)  source-bit linear term
+    v: jax.Array  # (d,)  target-bit linear term
+    w: jax.Array  # (d,)  interaction term
+
+
+def bilinear_decompose(thetas: jax.Array, eps: float = 1e-30) -> BilinearLogTheta:
+    logt = jnp.log(jnp.clip(thetas, eps, 1.0))
+    t00, t01 = logt[:, 0, 0], logt[:, 0, 1]
+    t10, t11 = logt[:, 1, 0], logt[:, 1, 1]
+    return BilinearLogTheta(
+        c0=jnp.sum(t00),
+        u=t10 - t00,
+        v=t01 - t00,
+        w=t11 + t00 - t01 - t10,
+    )
+
+
+def log_edge_prob(
+    F_src: jax.Array, F_dst: jax.Array, thetas: jax.Array
+) -> jax.Array:
+    """(ns, nt) matrix of log Q between rows of F_src and rows of F_dst."""
+    bl = bilinear_decompose(thetas)
+    fs = F_src.astype(jnp.float32)
+    ft = F_dst.astype(jnp.float32)
+    inter = (fs * bl.w[None, :]) @ ft.T  # rank-d matmul (MXU)
+    return bl.c0 + (fs @ bl.u)[:, None] + (ft @ bl.v)[None, :] + inter
+
+
+def edge_prob_matrix(F: jax.Array, thetas: jax.Array) -> jax.Array:
+    """Exact dense Q (paper eq. 7) — O(n^2 d) memory/compute, tests only."""
+    return jnp.exp(log_edge_prob(F, F, thetas))
+
+
+def log_prob_pairs(
+    F: jax.Array, thetas: jax.Array, src: jax.Array, dst: jax.Array
+) -> jax.Array:
+    """log Q_{src, dst} for index pairs — O(E d)."""
+    bl = bilinear_decompose(thetas)
+    fs = F[src].astype(jnp.float32)
+    ft = F[dst].astype(jnp.float32)
+    return bl.c0 + fs @ bl.u + ft @ bl.v + jnp.sum(fs * bl.w[None, :] * ft, axis=1)
+
+
+def expected_edges(params: MAGMParams, n: int) -> float:
+    """E|E| = sum_ij Q_ij = prod_k E_ab theta^(k)[a,b] * n^2 with a~mu_k, b~mu_k."""
+    mu = params.mu
+    th = params.thetas
+    per_level = (
+        (1 - mu) * (1 - mu) * th[:, 0, 0]
+        + (1 - mu) * mu * th[:, 0, 1]
+        + mu * (1 - mu) * th[:, 1, 0]
+        + mu * mu * th[:, 1, 1]
+    )
+    return float(n * n * jnp.prod(per_level))
+
+
+def config_counts(lam: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Unique configurations and their multiplicities (host-side)."""
+    return np.unique(np.asarray(lam), return_counts=True)

@@ -1,0 +1,305 @@
+"""Algorithm 2 — quilting KPGM samples into a MAGM sample — plus the
+Section-5 split sampler for unbalanced attribute distributions.
+
+Quilting: partition nodes into D_1..D_B (partition.py), and for every block
+pair (k, l) sample a FULL KPGM graph with Algorithm 1, keep only the edges
+(x, y) for which some i in D_k has lambda_i = x and some j in D_l has
+lambda_j = y, and map them back to node space.  Theorem 3: the union is an
+exact MAGM sample.  Expected cost O(B^2 log(n) |E|), and B = O(log n) w.h.p.
+for balanced attributes (Theorem 4).
+
+Section-5 split: configurations occurring more than B' times are pulled out
+into R "heavy" groups D-hat_1..D-hat_R; all block pairs touching a heavy group
+are Erdos-Renyi uniform blocks (every node in a heavy group shares one
+configuration, so the edge probability is a single scalar P_{lam'_i, lam'_j}).
+The remaining "light" nodes W are quilted with B <= B'.  B' is chosen by
+minimising the cost model T(B') = B'^2 log(n)|E| + (|W|+d)R + dR^2.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kpgm, magm, partition
+
+
+class QuiltStats(NamedTuple):
+    B: int
+    num_kpgm_draws: int
+    kpgm_edges_total: int
+    kept_edges: int
+    heavy_groups: int
+    light_nodes: int
+    bprime: Optional[int]
+
+
+def _dedupe(edges: np.ndarray) -> np.ndarray:
+    """Unique rows of an (E, 2) int64 edge array."""
+    if edges.size == 0:
+        return edges.reshape(0, 2).astype(np.int64)
+    key = edges[:, 0].astype(np.int64) << 32 | edges[:, 1].astype(np.int64)
+    uniq = np.unique(key)
+    return np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
+
+
+def quilt_sample(
+    key: jax.Array,
+    params: magm.MAGMParams,
+    F: np.ndarray,
+    *,
+    return_stats: bool = False,
+) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
+    """Sample a MAGM graph by quilting (Algorithm 2).  Returns (E, 2) int64.
+
+    ``F`` is the (n, d) attribute matrix (sample with magm.sample_attributes or
+    supply observed attributes).  Requires d == log2-range of configs; node
+    count n is free (the KPGM draws live in config space of size 2^d).
+    """
+    F = np.asarray(F)
+    lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
+    part = partition.build_partition(lam)
+    kp = kpgm.KPGMParams(params.thetas)
+
+    edges = []
+    draws = part.B * part.B
+    kpgm_total = 0
+    key, sub = jax.random.split(key)
+    # all B^2 independent KPGM draws from shared device batches
+    graphs = kpgm.kpgm_sample_many(sub, kp, draws)
+    for k in range(part.B):
+        for l in range(part.B):
+            e = graphs[k * part.B + l]
+            kpgm_total += e.shape[0]
+            if e.shape[0] == 0:
+                continue
+            src = partition.lookup_nodes(
+                part.sorted_configs[k], part.sorted_nodes[k], e[:, 0]
+            )
+            dst = partition.lookup_nodes(
+                part.sorted_configs[l], part.sorted_nodes[l], e[:, 1]
+            )
+            keep = (src >= 0) & (dst >= 0)
+            if keep.any():
+                edges.append(np.stack([src[keep], dst[keep]], axis=1))
+
+    out = (
+        np.concatenate(edges, axis=0)
+        if edges
+        else np.zeros((0, 2), dtype=np.int64)
+    )
+    # Blocks are disjoint in node space (each (i, j) pair belongs to exactly
+    # one (|Z_i|, |Z_j|) block), so no cross-block dedup is needed.
+    if return_stats:
+        return out, QuiltStats(
+            B=part.B,
+            num_kpgm_draws=draws,
+            kpgm_edges_total=kpgm_total,
+            kept_edges=out.shape[0],
+            heavy_groups=0,
+            light_nodes=F.shape[0],
+            bprime=None,
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section 5: split sampler for unbalanced mu
+# ---------------------------------------------------------------------------
+
+
+def _er_block(
+    rng: np.random.Generator, ns: int, nt: int, p: float, max_retry: int = 8
+) -> np.ndarray:
+    """Erdos-Renyi directed block: each of the ns*nt cells is an edge w.p. p.
+
+    Distributionally equivalent to the paper's geometric skip-sampling: draw
+    the edge COUNT ~ Binomial(ns*nt, p), then place edges uniformly without
+    replacement (fixed-shape + dedup-retry; DESIGN.md section 3, change (b)).
+    """
+    cells = ns * nt
+    if cells == 0 or p <= 0.0:
+        return np.zeros((0, 2), dtype=np.int64)
+    p = min(p, 1.0)
+    count = rng.binomial(cells, p)
+    if count == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    if count > cells // 2:
+        # dense block: complement trick keeps uniform-without-replacement exact
+        flat = rng.permutation(cells)[:count]
+    else:
+        flat = np.unique(rng.integers(0, cells, size=int(count * 1.1) + 8))
+        for _ in range(max_retry):
+            if flat.size >= count:
+                break
+            extra = rng.integers(0, cells, size=count)
+            flat = np.unique(np.concatenate([flat, extra]))
+        rng.shuffle(flat)
+        flat = flat[:count]
+    return np.stack([flat // nt, flat % nt], axis=1).astype(np.int64)
+
+
+def choose_bprime(
+    counts: np.ndarray, n: int, d: int, expected_e: float
+) -> Tuple[int, float]:
+    """Minimise T(B') = B'^2 log(n) |E| + (|W| + d) R + d R^2 over candidate B'.
+
+    ``counts`` are the multiplicities of the distinct configurations.  Only the
+    distinct multiplicity values are candidates (step changes happen there).
+    """
+    counts = np.sort(np.asarray(counts))
+    log_n = max(np.log2(max(n, 2)), 1.0)
+    cands = np.unique(counts)
+    best_bp, best_t = int(counts.max()), float("inf")
+    for bp in cands:
+        heavy = counts > bp
+        r = int(heavy.sum())
+        w = int(counts[~heavy].sum())
+        t = float(bp) ** 2 * log_n * max(expected_e, 1.0) + (w + d) * r + d * r * r
+        if t < best_t:
+            best_t, best_bp = t, int(bp)
+    return best_bp, best_t
+
+
+def quilt_sample_fast(
+    key: jax.Array,
+    params: magm.MAGMParams,
+    F: np.ndarray,
+    *,
+    bprime: Optional[int] = None,
+    seed: int = 0,
+    return_stats: bool = False,
+) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
+    """Section-5 sampler: quilt the light nodes, ER-sample the heavy blocks."""
+    F = np.asarray(F)
+    n, d = F.shape
+    lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
+    uniq, counts = np.unique(lam, return_counts=True)
+    if bprime is None:
+        bprime, _ = choose_bprime(
+            counts, n, d, magm.expected_edges(params, n)
+        )
+
+    heavy_mask_cfg = counts > bprime
+    heavy_cfgs = uniq[heavy_mask_cfg]
+    node_is_heavy = np.isin(lam, heavy_cfgs)
+    W = np.nonzero(~node_is_heavy)[0]  # light nodes
+    heavy_groups = [np.nonzero(lam == c)[0] for c in heavy_cfgs]
+    R = len(heavy_groups)
+
+    rng = np.random.default_rng(seed)
+    pieces = []
+    stats_b = 0
+    draws = kp_total = 0
+
+    # (1) light x light: quilt the W-subgraph (configs unchanged; B <= B').
+    if W.size:
+        key, sub = jax.random.split(key)
+        res = quilt_sample(sub, params, F[W], return_stats=True)
+        ew, st = res
+        stats_b, draws, kp_total = st.B, st.num_kpgm_draws, st.kpgm_edges_total
+        if ew.size:
+            pieces.append(np.stack([W[ew[:, 0]], W[ew[:, 1]]], axis=1))
+
+    # Edge probabilities between configurations via the bilinear form.
+    if R:
+        heavy_attr = np.asarray(
+            magm.attributes_from_configs(jnp.asarray(heavy_cfgs), d)
+        )
+        # (2) heavy x heavy blocks (including the diagonal): scalar-p ER blocks.
+        logq_hh = np.asarray(
+            magm.log_edge_prob(
+                jnp.asarray(heavy_attr), jnp.asarray(heavy_attr), params.thetas
+            )
+        )
+        for a in range(R):
+            ga = heavy_groups[a]
+            for b in range(R):
+                gb = heavy_groups[b]
+                blk = _er_block(rng, ga.size, gb.size, float(np.exp(logq_hh[a, b])))
+                if blk.size:
+                    pieces.append(np.stack([ga[blk[:, 0]], gb[blk[:, 1]]], axis=1))
+
+        # (3) light x heavy and heavy x light strips: per light node i the
+        # probability against group b is the scalar P_{lam_i, lam'_b}.
+        if W.size:
+            logq_wh = np.asarray(
+                magm.log_edge_prob(
+                    jnp.asarray(F[W]), jnp.asarray(heavy_attr), params.thetas
+                )
+            )  # (|W|, R)
+            logq_hw = np.asarray(
+                magm.log_edge_prob(
+                    jnp.asarray(heavy_attr), jnp.asarray(F[W]), params.thetas
+                )
+            )  # (R, |W|)
+            for b in range(R):
+                gb = heavy_groups[b]
+                pw = np.exp(logq_wh[:, b])
+                counts_w = rng.binomial(gb.size, np.minimum(pw, 1.0))
+                tot = int(counts_w.sum())
+                if tot:
+                    rows = np.repeat(W, counts_w)
+                    cols = _sample_cols(rng, counts_w, gb)
+                    pieces.append(np.stack([rows, cols], axis=1))
+                ph = np.exp(logq_hw[b, :])
+                counts_h = rng.binomial(gb.size, np.minimum(ph, 1.0))
+                tot = int(counts_h.sum())
+                if tot:
+                    cols2 = np.repeat(W, counts_h)
+                    rows2 = _sample_cols(rng, counts_h, gb)
+                    pieces.append(np.stack([rows2, cols2], axis=1))
+
+    out = (
+        _dedupe(np.concatenate(pieces, axis=0))
+        if pieces
+        else np.zeros((0, 2), dtype=np.int64)
+    )
+    if return_stats:
+        return out, QuiltStats(
+            B=stats_b,
+            num_kpgm_draws=draws,
+            kpgm_edges_total=kp_total,
+            kept_edges=out.shape[0],
+            heavy_groups=R,
+            light_nodes=int(W.size),
+            bprime=int(bprime),
+        )
+    return out
+
+
+def _sample_cols(
+    rng: np.random.Generator, counts: np.ndarray, group: np.ndarray
+) -> np.ndarray:
+    """For each row i, draw counts[i] distinct members of ``group``.
+
+    Per-row sampling without replacement; vectorised by drawing with
+    replacement then fixing the (rare) collisions row by row.
+    """
+    tot = int(counts.sum())
+    cols = rng.integers(0, group.size, size=tot)
+    # fix collisions within each row segment
+    seg_ends = np.cumsum(counts[counts > 0])
+    seg_starts = np.concatenate([[0], seg_ends[:-1]])
+    for s, e in zip(seg_starts, seg_ends):
+        seg = cols[s:e]
+        u = np.unique(seg)
+        while u.size < seg.size:
+            extra = rng.integers(0, group.size, size=seg.size - u.size)
+            u = np.unique(np.concatenate([u, extra]))
+        cols[s:e] = u[: seg.size]
+    return group[cols]
+
+
+def naive_reference_sample(
+    key: jax.Array, params: magm.MAGMParams, F: np.ndarray
+) -> np.ndarray:
+    """O(n^2) exact sampler (the paper's baseline); small n only."""
+    Q = magm.edge_prob_matrix(jnp.asarray(np.asarray(F)), params.thetas)
+    u = jax.random.uniform(key, Q.shape)
+    adj = np.asarray(u < Q)
+    src, dst = np.nonzero(adj)
+    return np.stack([src, dst], axis=1).astype(np.int64)

@@ -1,0 +1,93 @@
+"""Graph statistics used by the paper's validity experiments (Figs 8-9).
+
+- |E| growth as n^c (Fig 8): edge counts are produced by the samplers.
+- Fraction of nodes in the largest strongly connected component (Fig 9).
+- Degree distribution helpers (MAGM's power-law claim).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+try:  # scipy is available in this environment; keep a pure-numpy fallback.
+    import scipy.sparse as _sp
+    import scipy.sparse.csgraph as _csgraph
+
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+
+def largest_scc_fraction(edges: np.ndarray, n: int) -> float:
+    """Fraction of nodes in the largest strongly connected component."""
+    if n == 0:
+        return 0.0
+    if edges.size == 0:
+        return 1.0 / n
+    if _HAVE_SCIPY:
+        adj = _sp.coo_matrix(
+            (np.ones(edges.shape[0], dtype=np.int8), (edges[:, 0], edges[:, 1])),
+            shape=(n, n),
+        ).tocsr()
+        ncomp, labels = _csgraph.connected_components(
+            adj, directed=True, connection="strong"
+        )
+        del ncomp
+        counts = np.bincount(labels)
+        return float(counts.max()) / n
+    return _largest_scc_fraction_np(edges, n)
+
+
+def _largest_scc_fraction_np(edges: np.ndarray, n: int) -> float:
+    """Forward/backward-BFS estimate from the highest-degree seeds."""
+    fwd = _csr(edges, n)
+    bwd = _csr(edges[:, ::-1], n)
+    deg = np.bincount(edges[:, 0], minlength=n) + np.bincount(
+        edges[:, 1], minlength=n
+    )
+    best = 1
+    for seed in np.argsort(-deg)[:4]:
+        scc = _reach(fwd, int(seed), n) & _reach(bwd, int(seed), n)
+        best = max(best, int(scc.sum()))
+    return best / n
+
+
+def _csr(edges: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    order = np.argsort(edges[:, 0], kind="stable")
+    dst = edges[order, 1]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, edges[:, 0] + 1, 1)
+    return np.cumsum(indptr), dst
+
+
+def _reach(csr: Tuple[np.ndarray, np.ndarray], seed: int, n: int) -> np.ndarray:
+    indptr, dst = csr
+    seen = np.zeros(n, dtype=bool)
+    seen[seed] = True
+    frontier = np.array([seed])
+    while frontier.size:
+        nxt = np.concatenate(
+            [dst[indptr[v] : indptr[v + 1]] for v in frontier]
+        )
+        nxt = np.unique(nxt)
+        nxt = nxt[~seen[nxt]]
+        seen[nxt] = True
+        frontier = nxt
+    return seen
+
+
+def degree_counts(edges: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(out_degree, in_degree) arrays."""
+    out_deg = np.bincount(edges[:, 0], minlength=n)
+    in_deg = np.bincount(edges[:, 1], minlength=n)
+    return out_deg, in_deg
+
+
+def fit_powerlaw_exponent(n_values: np.ndarray, e_values: np.ndarray) -> float:
+    """Slope c of log|E| vs log n (the paper's |E| = n^c observation)."""
+    ln_n = np.log(np.asarray(n_values, dtype=np.float64))
+    ln_e = np.log(np.maximum(np.asarray(e_values, dtype=np.float64), 1.0))
+    c = np.polyfit(ln_n, ln_e, 1)[0]
+    return float(c)

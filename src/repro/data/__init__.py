@@ -1,0 +1,5 @@
+"""Data substrate: MAGM graph corpora for LM training."""
+
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

@@ -1,0 +1,92 @@
+"""Data pipeline: the paper's quilted MAGM sampler as a first-class corpus.
+
+A MAGM graph is sampled once (quilting, Section-5 fast path), then converted
+into token sequences by RANDOM WALKS over the graph: each training sequence
+is a walk, each token a node id (hashed into the model vocabulary).  This is
+the "train a model on a synthetic social network" flow — the paper's
+generator feeding the LM substrate end to end (DESIGN.md section 4).
+
+Deterministic cursor: batch(step) is a pure function of (seed, step), so the
+fault supervisor's restart replays identical data (dist/fault.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import magm_paper
+from repro.core import magm, quilt
+
+
+@dataclasses.dataclass
+class MAGMCorpus:
+    num_nodes: int
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    mu: float = 0.5
+    theta: Optional[np.ndarray] = None
+    restart_prob: float = 0.05  # teleport on dead ends / mixing
+
+    def __post_init__(self):
+        d = max(int(np.log2(self.num_nodes)), 1)
+        theta = self.theta if self.theta is not None else magm_paper.THETA_1
+        params = magm.make_params(theta, self.mu, d)
+        key = jax.random.PRNGKey(self.seed)
+        f_key, q_key = jax.random.split(key)
+        F = np.asarray(magm.sample_attributes(f_key, self.num_nodes, params.mu))
+        edges, stats = quilt.quilt_sample_fast(
+            q_key, params, F, seed=self.seed, return_stats=True
+        )
+        self.quilt_stats = stats
+        self._build_csr(edges)
+
+    # --- graph -> walk machinery ---------------------------------------
+    def _build_csr(self, edges: np.ndarray) -> None:
+        n = self.num_nodes
+        self.num_edges = edges.shape[0]
+        if edges.size == 0:
+            self.indptr = np.zeros(n + 1, dtype=np.int64)
+            self.adj = np.zeros((0,), dtype=np.int64)
+            return
+        order = np.argsort(edges[:, 0], kind="stable")
+        self.adj = edges[order, 1].copy()
+        counts = np.bincount(edges[:, 0], minlength=n)
+        self.indptr = np.concatenate([[0], np.cumsum(counts)])
+
+    def _walk(self, rng: np.random.Generator) -> np.ndarray:
+        n = self.num_nodes
+        node = int(rng.integers(0, n))
+        out = np.empty(self.seq_len + 1, dtype=np.int64)
+        for t in range(self.seq_len + 1):
+            out[t] = node
+            lo, hi = self.indptr[node], self.indptr[node + 1]
+            if hi <= lo or rng.random() < self.restart_prob:
+                node = int(rng.integers(0, n))
+            else:
+                node = int(self.adj[rng.integers(lo, hi)])
+        return out
+
+    def _tok(self, nodes: np.ndarray) -> np.ndarray:
+        # stable node-id -> vocab hash (splitmix-style) so token identity is
+        # consistent across batches without a 2^d embedding table
+        x = nodes.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+        x ^= x >> np.uint64(31)
+        return (x % np.uint64(self.vocab_size)).astype(np.int32)
+
+    # --- public API ------------------------------------------------------
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """Deterministic batch for one step: {tokens, labels} (B, S)."""
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        walks = np.stack([self._walk(rng) for _ in range(self.batch_size)])
+        toks = self._tok(walks)
+        return {
+            "tokens": jnp.asarray(toks[:, : self.seq_len]),
+            "labels": jnp.asarray(toks[:, 1 : self.seq_len + 1]),
+        }

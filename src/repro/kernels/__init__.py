@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- quadrant_descent: Algorithm-1 KPGM edge sampling inner loop (VPU, HBM-bound)
+- magm_logprob:     MAGM bilinear log edge-probability tile (MXU)
+- bernoulli_tile:   fused log-prob + Bernoulli threshold (naive baseline)
+
+ops.py holds the jit'd public wrappers, ref.py the pure-jnp oracles.
+All kernels validate in interpret=True mode on CPU.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,76 @@
+"""Fused naive-sampler tile: log Q computation + Bernoulli thresholding.
+
+One kernel step computes the (BM, BN) log-Q tile (MXU bilinear form, as in
+magm_logprob) and immediately compares against log-uniforms, emitting an int8
+adjacency mask.  Fusion avoids round-tripping the f32 log-Q tile through HBM:
+per tile the HBM traffic drops from
+
+    write 4B (logq) + read 4B (logq) + read 4B (uniform) + write 1B (mask)
+
+to  read 4B (uniform) + write 1B (mask) — a 2.6x traffic cut for the
+memory-bound naive baseline.  On real TPU hardware the uniform read also
+disappears (in-kernel pltpu PRNG, no CPU interpret lowering — see
+quadrant_descent.py docstring), leaving a pure 1B/cell stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 256
+BN = 256
+
+
+def _kernel(fs_ref, ft_ref, u_ref, v_ref, w_ref, c0_ref, logu_ref, o_ref):
+    fs = fs_ref[...]
+    ft = ft_ref[...]
+    inter = jax.lax.dot_general(
+        fs * w_ref[...],
+        ft,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    row = jnp.sum(fs * u_ref[...], axis=1, keepdims=True)
+    col = jnp.sum(ft * v_ref[...], axis=1, keepdims=True).T
+    logq = c0_ref[...] + row + col + inter
+    o_ref[...] = (logu_ref[...] < logq).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bernoulli_tile(
+    F_src: jax.Array,
+    F_dst: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    c0: jax.Array,
+    log_uniforms: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sampled (M, N) int8 adjacency block: A_ij ~ Bernoulli(Q_ij)."""
+    m, d = F_src.shape
+    n = F_dst.shape[0]
+    if m % BM or n % BN:
+        raise ValueError(f"(M={m}, N={n}) must be multiples of ({BM}, {BN})")
+    grid = (m // BM, n // BN)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(F_src, F_dst, u, v, w, c0, log_uniforms)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the MAGM log edge-probability tile (bilinear form).
+
+log Q = c0 + (F_s u) 1^T + 1 (F_t v)^T + F_s diag(w) F_t^T   (DESIGN.md 3.2)
+
+The (BM, d) x (d, BN) contraction runs on the MXU; the rank-1 corrections are
+VPU adds fused into the same tile.  d is zero-padded to a multiple of 128 by
+ops.py so the contraction dimension is MXU-aligned (padding rows of F and
+zeros of w contribute exactly 0 to the product).
+
+Block sizes: (BM, BN) = (256, 256) f32 output tile = 256KB; the two attribute
+blocks at d<=128 add 2*256*128*4 = 256KB — total ~0.8MB of VMEM per step,
+well inside the ~16MB budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 256
+BN = 256
+
+
+def _kernel(fs_ref, ft_ref, u_ref, v_ref, w_ref, c0_ref, o_ref):
+    fs = fs_ref[...]  # (BM, d) f32
+    ft = ft_ref[...]  # (BN, d) f32
+    u = u_ref[...]  # (1, d)
+    v = v_ref[...]  # (1, d)
+    w = w_ref[...]  # (1, d)
+    c0 = c0_ref[...]  # (1, 1)
+    inter = jax.lax.dot_general(
+        fs * w,  # (BM, d) scaled source bits
+        ft,  # (BN, d)
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BM, BN) on the MXU
+    row = jnp.sum(fs * u, axis=1, keepdims=True)  # (BM, 1)
+    col = jnp.sum(ft * v, axis=1, keepdims=True).T  # (1, BN)
+    o_ref[...] = c0 + row + col + inter
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def magm_logprob(
+    F_src: jax.Array,
+    F_dst: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    c0: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """(M, d), (N, d) float32 attribute blocks -> (M, N) float32 log Q.
+
+    M, N must be multiples of (BM, BN); d a multiple of 128 (ops.py pads).
+    """
+    m, d = F_src.shape
+    n = F_dst.shape[0]
+    if m % BM or n % BN:
+        raise ValueError(f"(M={m}, N={n}) must be multiples of ({BM}, {BN})")
+    grid = (m // BM, n // BN)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(F_src, F_dst, u, v, w, c0)

@@ -1,0 +1,83 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle shape padding (edge-axis to TILE, attribute-axis to the 128-lane
+MXU width, tile axes to (BM, BN)), parameter packing for the bilinear form,
+and the interpret-mode switch (CPU containers validate with interpret=True;
+on TPU `repro.kernels.ops.INTERPRET` flips to False).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import magm
+from repro.kernels import bernoulli_tile as _bt
+from repro.kernels import magm_logprob as _ml
+from repro.kernels import quadrant_descent as _qd
+
+# CPU containers (this environment) must interpret; set False on real TPU.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def sample_edge_batch_pallas(
+    key: jax.Array, thetas: jax.Array, num_edges: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Pallas-accelerated Algorithm-1 batch (drop-in for kpgm.sample_edge_batch)."""
+    d = thetas.shape[0]
+    flat = thetas.reshape(-1, 4)
+    cum = jnp.cumsum(flat / jnp.sum(flat, axis=1, keepdims=True), axis=1)
+    padded = num_edges + ((-num_edges) % _qd.TILE)
+    u = jax.random.uniform(key, (padded, d))
+    src, dst = _qd.quadrant_descent(u, cum, interpret=INTERPRET)
+    return src[:num_edges], dst[:num_edges]
+
+
+def _packed_bilinear(thetas: jax.Array, d_pad: int):
+    bl = magm.bilinear_decompose(thetas)
+    u = _pad_to(bl.u[None, :], 1, d_pad)
+    v = _pad_to(bl.v[None, :], 1, d_pad)
+    w = _pad_to(bl.w[None, :], 1, d_pad)
+    c0 = bl.c0.reshape(1, 1)
+    return u, v, w, c0
+
+
+def magm_logprob_pallas(
+    F_src: jax.Array, F_dst: jax.Array, thetas: jax.Array
+) -> jax.Array:
+    """(ns, d), (nt, d) attributes -> (ns, nt) log Q via the MXU tile kernel."""
+    ns, nt = F_src.shape[0], F_dst.shape[0]
+    fs = _pad_to(_pad_to(F_src.astype(jnp.float32), 0, _ml.BM), 1, 128)
+    ft = _pad_to(_pad_to(F_dst.astype(jnp.float32), 0, _ml.BN), 1, 128)
+    u, v, w, c0 = _packed_bilinear(thetas, 128)
+    out = _ml.magm_logprob(fs, ft, u, v, w, c0, interpret=INTERPRET)
+    return out[:ns, :nt]
+
+
+def bernoulli_sample_pallas(
+    key: jax.Array, F_src: jax.Array, F_dst: jax.Array, thetas: jax.Array
+) -> jax.Array:
+    """Fused naive-baseline tile: int8 adjacency block sampled from Q."""
+    ns, nt = F_src.shape[0], F_dst.shape[0]
+    fs = _pad_to(_pad_to(F_src.astype(jnp.float32), 0, _bt.BM), 1, 128)
+    ft = _pad_to(_pad_to(F_dst.astype(jnp.float32), 0, _bt.BN), 1, 128)
+    u, v, w, c0 = _packed_bilinear(thetas, 128)
+    logu = jnp.log(
+        jax.random.uniform(
+            key, (fs.shape[0], ft.shape[0]), minval=1e-38, maxval=1.0
+        )
+    )
+    out = _bt.bernoulli_tile(fs, ft, u, v, w, c0, logu, interpret=INTERPRET)
+    return out[:ns, :nt]

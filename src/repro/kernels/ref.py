@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quadrant_descent_ref(uniforms: jax.Array, cumprobs: jax.Array):
+    """(N, d) uniforms, (d, 4) cumulative probs -> (src, dst) int32."""
+    d = uniforms.shape[1]
+    quad = jnp.sum(
+        uniforms[:, :, None] >= cumprobs[None, :, :3], axis=-1
+    ).astype(jnp.int32)
+    a = quad >> 1
+    b = quad & 1
+    pows = (1 << jnp.arange(d - 1, -1, -1, dtype=jnp.int32))
+    return a @ pows, b @ pows
+
+
+def magm_logprob_ref(
+    F_src: jax.Array,
+    F_dst: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    c0: jax.Array,
+) -> jax.Array:
+    """Bilinear log-Q oracle; u/v/w are (d,) and c0 scalar (unpadded)."""
+    fs = F_src.astype(jnp.float32)
+    ft = F_dst.astype(jnp.float32)
+    return (
+        c0
+        + (fs @ u)[:, None]
+        + (ft @ v)[None, :]
+        + (fs * w[None, :]) @ ft.T
+    )
+
+
+def bernoulli_tile_ref(
+    F_src, F_dst, u, v, w, c0, log_uniforms
+) -> jax.Array:
+    logq = magm_logprob_ref(F_src, F_dst, u, v, w, c0)
+    return (log_uniforms < logq).astype(jnp.int8)

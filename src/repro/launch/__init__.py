@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from tests — it sets XLA_FLAGS for
+512 host devices at import time.
+"""

@@ -1,0 +1,227 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count on first initialisation, and the dry-run needs 512 host devices
+to build the 2x16x16 production mesh.  (Tests and benchmarks must NOT import
+this module — they see 1 device.)
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.analysis import hlo_cost, roofline
+from repro.configs.base import ShapeConfig, get_shape
+from repro.dist import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build as build_model
+from repro.train import optimizer as opt_lib
+from repro.train import steps as steps_lib
+
+# cells skipped per DESIGN.md section 5 (long_500k needs sub-quadratic mixing)
+SKIPS: Dict[tuple, str] = {}
+for _a in configs.ARCHS:
+    _cfg = configs.get(_a)
+    if not _cfg.sub_quadratic:
+        SKIPS[(_a, "long_500k")] = (
+            "full softmax attention: 500k dense KV cache is not sub-quadratic"
+            " (DESIGN.md section 5)"
+        )
+
+
+def _shardings(mesh, tree, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def pattern_unit(cfg) -> int:
+    """Smallest layer count that tiles the arch's block schedule."""
+    if cfg.family == "vlm":
+        return cfg.cross_attn_segment
+    if cfg.family == "hybrid":
+        return cfg.shared_attn_every
+    return 1
+
+
+def lower_cell(
+    arch: str,
+    shape: ShapeConfig,
+    *,
+    multi_pod: bool,
+    verbose: bool = True,
+    num_layers: Optional[int] = None,
+):
+    """Lower + compile one cell; returns (record, compiled).
+
+    XLA's cost analysis counts a while-loop (scan) body ONCE regardless of
+    trip count, so per-layer costs of the rolled module under-report.  The
+    caller compiles reduced-depth unit cells (num_layers = u and 2u) and
+    extrapolates linearly — see run_cell."""
+    import dataclasses as _dc
+
+    cfg = configs.get(arch)
+    if num_layers is not None:
+        cfg = _dc.replace(cfg, num_layers=num_layers)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    model = build_model(cfg)
+
+    params_abs = model.abstract_params()
+    pspecs = sharding.param_specs(
+        cfg, params_abs, mesh, inference=shape.kind != "train"
+    )
+    psh = _shardings(mesh, params_abs, pspecs)
+    inputs = model.input_specs(shape)
+    ispecs = sharding.input_specs(cfg, shape, inputs, mesh)
+    ish = _shardings(mesh, inputs, ispecs)
+
+    t0 = time.perf_counter()
+    with mesh:
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(opt_lib.init, params_abs)
+            ospecs = opt_lib.OptState(
+                step=P(),
+                mu=pspecs,
+                nu=jax.tree.map(lambda s: s, pspecs),
+                master=jax.tree.map(lambda s: s, pspecs),
+            )
+            osh = _shardings(mesh, opt_abs, ospecs)
+            step = steps_lib.make_train_step(model)
+            fn = jax.jit(step, in_shardings=(psh, osh, ish))
+            lowered = fn.lower(params_abs, opt_abs, inputs)
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model)
+            fn = jax.jit(step, in_shardings=(psh, ish))
+            lowered = fn.lower(params_abs, inputs)
+        else:  # decode
+            step = steps_lib.make_decode_step(model)
+            fn = jax.jit(step, in_shardings=(psh, ish))
+            lowered = fn.lower(params_abs, inputs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_bytes = None
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "peak_memory_in_bytes"):
+            if hasattr(mem, attr):
+                mem_bytes = float(getattr(mem, attr))
+                break
+    xla_cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware cost model (analysis/hlo_cost.py): XLA's own cost_analysis
+    # counts scan bodies once, under-reporting layer stacks by ~num_layers.
+    lw = hlo_cost.analyze(hlo)
+    rf = roofline.build(
+        arch,
+        shape,
+        cfg,
+        mesh_name,
+        chips,
+        {"flops": lw.flops, "bytes accessed": lw.bytes},
+        "",
+        mem_bytes,
+    )
+    rf.coll_breakdown = {k: int(v) for k, v in lw.coll.items()}
+    rf.coll_gbytes = lw.coll_bytes / 1e9
+    record = rf.row() | {
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "status": "ok",
+        "memory_analysis": str(mem),
+        "xla_cost_analysis_gflops": float(xla_cost.get("flops", 0.0)) / 1e9,
+    }
+    if verbose:
+        print(
+            f"[{arch} x {shape.name} x {mesh_name}] ok "
+            f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+            f"t_comp={rf.t_compute:.4f}s t_mem={rf.t_memory:.4f}s "
+            f"t_coll={rf.t_collective:.4f}s bottleneck={rf.bottleneck} "
+            f"useful={rf.useful_flop_ratio:.3f} "
+            f"roofline_frac={rf.roofline_fraction:.3f}",
+            flush=True,
+        )
+        print(f"  memory_analysis: {mem}", flush=True)
+    return record, compiled
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool) -> Dict[str, Any]:
+    if (arch, shape_name) in SKIPS:
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped",
+            "reason": SKIPS[(arch, shape_name)],
+        }
+    try:
+        record, _ = lower_cell(arch, get_shape(shape_name), multi_pod=multi_pod)
+        return record
+    except Exception as e:  # a failure here is a bug in the system
+        traceback.print_exc()
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "failed",
+            "error": f"{type(e).__name__}: {e}",
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (assignment spelling ok)")
+    ap.add_argument("--shape", default=None, choices=[s.name for s in configs.SHAPES])
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for a in configs.ARCHS:
+            for s in configs.SHAPES:
+                cells.append((a, s.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((configs.ALIASES.get(args.arch, args.arch), args.shape))
+
+    records = []
+    for multi_pod in meshes:
+        for arch, shape_name in cells:
+            records.append(run_cell(arch, shape_name, multi_pod=multi_pod))
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = sum(r["status"] == "failed" for r in records)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialisation).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips.
+
+    Axes: pod (inter-pod DP), data (FSDP + batch), model (TP/EP)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this process actually has (tests / smoke runs): 1D 'data'."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,71 @@
+"""Serving driver: prefill a prompt batch, then greedy-decode tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.model import build as build_model
+from repro.train import steps as steps_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    b, s = args.batch, args.prompt_len
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1), (b, s), 0, cfg.vocab_size
+    )
+    context = None
+    if cfg.family == "vlm":
+        context = jnp.zeros((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        context = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+
+    max_len = s + args.gen
+    prefill = jax.jit(steps_lib.make_prefill_step(model, max_len=max_len))
+    decode = jax.jit(steps_lib.make_decode_step(model))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": prompts, "context": context})
+    next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    out = [next_tok]
+    for i in range(args.gen - 1):
+        batch = {
+            "cache": cache,
+            "tokens": next_tok[:, None],
+            "cache_len": jnp.int32(s + i),
+            "context": context,
+        }
+        next_tok, _, cache = decode(params, batch)
+        out.append(next_tok)
+    toks = jnp.stack(out, axis=1)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {cfg.name}: generated {toks.shape} in {dt:.2f}s")
+    print("[serve] sample row:", toks[0].tolist())
+    assert bool(jnp.isfinite(logits).all()), "non-finite prefill logits"
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

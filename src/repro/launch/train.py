@@ -1,0 +1,103 @@
+"""End-to-end training driver: MAGM-graph corpus -> LM training with
+checkpoint/restart supervision.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+Runs on whatever devices exist (1 CPU device in this container, the
+production mesh on a real fleet via --mesh production).  The data source is
+the paper's sampler: random walks over a quilted MAGM graph (data/pipeline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import pipeline as data_pipeline
+from repro.dist import checkpoint as ckpt_lib
+from repro.dist import fault, sharding
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import build as build_model
+from repro.train import optimizer as opt_lib
+from repro.train import steps as steps_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", choices=["host", "production"], default="host")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--graph-nodes", type=int, default=1 << 12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (
+        configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    )
+    mesh = (
+        make_production_mesh() if args.mesh == "production" else make_host_mesh()
+    )
+    model = build_model(cfg)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="qkg_train_")
+
+    # --- data: random walks over a quilted MAGM graph ------------------
+    source = data_pipeline.MAGMCorpus(
+        num_nodes=args.graph_nodes,
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq,
+        batch_size=args.batch,
+        seed=args.seed,
+    )
+    print(
+        f"[data] MAGM graph: n={source.num_nodes} |E|={source.num_edges} "
+        f"B(partition)={source.quilt_stats.B}"
+    )
+
+    # --- params / optimizer --------------------------------------------
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    opt_cfg = opt_lib.OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    opt_state = opt_lib.init(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[model] {cfg.name}: {n_params/1e6:.1f}M params")
+
+    pspecs = sharding.param_shardings(cfg, params, mesh)
+    del pspecs  # on the host mesh everything fits one device; jit handles it
+
+    step_fn = jax.jit(steps_lib.make_train_step(model, opt_cfg))
+
+    def batch_fn(step: int):
+        return source.batch(step)
+
+    sup = fault.TrainSupervisor(
+        step_fn,
+        batch_fn,
+        ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    params, opt_state, metrics = sup.run(params, opt_state, args.steps)
+    first, last = metrics[0], metrics[-1]
+    print(
+        f"[train] step {first['step']}: loss={first['loss']:.4f} -> "
+        f"step {last['step']}: loss={last['loss']:.4f} "
+        f"(acc {last['acc']:.3f}, ckpts in {ckpt_dir})"
+    )
+    assert last["loss"] < first["loss"], "loss did not decrease"
+    print("[train] OK — loss decreased")
+
+
+if __name__ == "__main__":
+    main()

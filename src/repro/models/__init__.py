@@ -1,0 +1,5 @@
+"""Model substrate: layers, SSM mixers, transformer assembly, KV caches."""
+
+from repro.models import kvcache, layers, model, ssm, transformer
+
+__all__ = ["kvcache", "layers", "model", "ssm", "transformer"]

@@ -1,0 +1,219 @@
+"""Flash attention with a custom VJP (block-recomputing backward).
+
+Motivation (EXPERIMENTS.md §Perf, iteration 5): differentiating the online-
+softmax scan makes JAX save the (qc, kc) probability block of EVERY chunk
+step for the backward — for a 32k prefill that is nq*nk = 2048 blocks/layer
+of f32 traffic (observed as the dominant memory-term contributor on every
+dense arch).  The flash backward instead saves only (out, lse) per position
+and RECOMPUTES each block's scores inside the gradient loop:
+
+    delta = rowsum(dO * O)
+    p     = exp(qk^T * scale - lse)
+    ds    = p * (dO V^T - delta)
+    dq   += ds K;   dk += ds^T q;   dv += p^T dO
+
+GQA: k/v carry KV heads; the KV->H broadcast happens per chunk inside the
+loops (a VMEM transient) and the backward group-sums dk/dv back to KV heads
+— full-length repeated K/V never touch HBM.
+
+All masks (causal / sliding window / q_offset) are arithmetic in absolute
+positions, so the backward rebuilds them exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd) — GQA broadcast happens per chunk
+    v: jax.Array,  # (B, Sk, KV, hd)
+    causal: bool,
+    window: int,
+    q_offset: int,
+    q_chunk: int,
+    kv_chunk: int,
+) -> jax.Array:
+    out, _ = _flash_fwd_impl(
+        q, k, v, causal, window, q_offset, q_chunk, kv_chunk
+    )
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = hd**-0.5
+    qc, kc = q_chunk, kv_chunk
+    nq, nk = sq // qc, sk // kc
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kvh, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kvh, hd), 1, 0)
+
+    def q_step(_, qi):
+        qblk, qidx = qi
+        qpos = q_offset + qidx * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            # GQA: broadcast KV->H per chunk (VMEM transient, never in HBM)
+            kblk = kblk if rep == 1 else jnp.repeat(kblk, rep, axis=2)
+            vblk = vblk if rep == 1 else jnp.repeat(vblk, rep, axis=2)
+            kpos = kidx * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = jnp.where(_mask(qpos, kpos, causal, window)[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((b, h, qc), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((b, h, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((b, h, qc, hd), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kr, vr, jnp.arange(nk))
+        )
+        l_safe = jnp.maximum(l, 1e-30)
+        o = (acc / l_safe[..., None]).astype(q.dtype)  # (b, h, qc, hd)
+        lse = m + jnp.log(l_safe)  # (b, h, qc)
+        return None, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, sq, hd)
+    out = jnp.moveaxis(out, 1, 2)  # (b, sq, h, hd)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(b, h, sq)
+    return out, lse
+
+
+def _fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(
+        q, k, v, causal, window, q_offset, q_chunk, kv_chunk
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, q_offset, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = hd**-0.5
+    qc, kc = q_chunk, kv_chunk
+    nq, nk = sq // qc, sk // kc
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qc, h, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kvh, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kvh, hd), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(b, nq, qc, h, hd), 1, 0)
+    our = jnp.moveaxis(out.reshape(b, nq, qc, h, hd), 1, 0)
+    lser = jnp.moveaxis(lse.reshape(b, h, nq, qc), 2, 0)  # (nq, b, h, qc)
+
+    # delta_i = rowsum(dO_i * O_i), (nq, b, h, qc)
+    delta = jnp.einsum(
+        "nbqhd,nbqhd->nbhq", dor.astype(jnp.float32), our.astype(jnp.float32)
+    )
+
+    def kv_step(carry, ki):
+        dq_acc = carry  # (nq, b, qc, h, hd) f32
+        kblk, vblk, kidx = ki
+        kblk = kblk if rep == 1 else jnp.repeat(kblk, rep, axis=2)
+        vblk = vblk if rep == 1 else jnp.repeat(vblk, rep, axis=2)
+        kpos = kidx * kc + jnp.arange(kc)
+
+        def q_step(carry2, qi):
+            dk_blk, dv_blk = carry2
+            qblk, doblk, lseblk, dblk, qidx = qi
+            qpos = q_offset + qidx * qc + jnp.arange(qc)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = jnp.where(
+                _mask(qpos, kpos, causal, window)[None, None], s, NEG_INF
+            )
+            p = jnp.exp(s - lseblk[..., None])  # (b, h, qc, kc)
+            dp = jnp.einsum(
+                "bqhd,bkhd->bhqk", doblk, vblk,
+                preferred_element_type=jnp.float32,
+            )
+            ds = p * (dp - dblk[..., None]) * scale
+            dq_b = jnp.einsum(
+                "bhqk,bkhd->bqhd", ds.astype(kblk.dtype), kblk,
+                preferred_element_type=jnp.float32,
+            )
+            dk_b = jnp.einsum(
+                "bhqk,bqhd->bkhd", ds.astype(qblk.dtype), qblk,
+                preferred_element_type=jnp.float32,
+            )
+            dv_b = jnp.einsum(
+                "bhqk,bqhd->bkhd", p.astype(doblk.dtype), doblk,
+                preferred_element_type=jnp.float32,
+            )
+            if rep > 1:  # group-sum the broadcast transpose back to KV heads
+                dk_b = dk_b.reshape(b, kc, kvh, rep, hd).sum(3)
+                dv_b = dv_b.reshape(b, kc, kvh, rep, hd).sum(3)
+            return (dk_blk + dk_b, dv_blk + dv_b), dq_b
+
+        z = jnp.zeros((b, kc, kvh, hd), dtype=jnp.float32)
+        (dk_blk, dv_blk), dq_contrib = jax.lax.scan(
+            q_step, (z, z), (qr, dor, lser, delta, jnp.arange(nq))
+        )
+        return dq_acc + dq_contrib, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((nq, b, qc, h, hd), dtype=jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (kr, vr, jnp.arange(nk)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, sk, kvh, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, kvh, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def ref_attention(
+    q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0
+) -> jax.Array:
+    """Dense softmax oracle for tests (materialises full scores)."""
+    hd = q.shape[-1]
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * hd**-0.5
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    s = jnp.where(_mask(qpos, kpos, causal, window)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)

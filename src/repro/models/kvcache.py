@@ -1,0 +1,65 @@
+"""Decode-time caches: dense KV, sliding-window ring KV, SSM state.
+
+Cache layout (all leading-L stacked so layer scans can thread them):
+  attention: {"k": (L, B, S_cache, KV, hd), "v": ...}   bf16
+  ssm:       {"h": (L, B, ...), "conv": (L, B, k-1, ...)}  f32 state
+  hybrid:    ssm stack + one unstacked shared-attention KV entry
+
+For sliding-window models S_cache = min(window, S) — the ring buffer bounds
+the long_500k footprint (see DESIGN.md shape notes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_lib
+
+Cache = Dict[str, Any]
+
+
+def attn_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, abstract: bool = False) -> Cache:
+    """Zero-initialised (or ShapeDtypeStruct) decode cache for one model."""
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    L = cfg.num_layers
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    s_cache = attn_cache_len(cfg, seq_len)
+    cache: Cache = {}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache["k"] = mk((L, batch, s_cache, kv, hd), jnp.bfloat16)
+        cache["v"] = mk((L, batch, s_cache, kv, hd), jnp.bfloat16)
+    elif cfg.family == "ssm":
+        shapes = ssm_lib.mamba1_cache_shape(cfg, batch)
+        cache["h"] = mk((L, *shapes["h"]), jnp.float32)
+        cache["conv"] = mk((L, *shapes["conv"]), jnp.bfloat16)
+    elif cfg.family == "hybrid":
+        shapes = ssm_lib.mamba2_cache_shape(cfg, batch)
+        cache["h"] = mk((L, *shapes["h"]), jnp.float32)
+        cache["conv"] = mk((L, *shapes["conv"]), jnp.bfloat16)
+        n_shared = L // cfg.shared_attn_every
+        cache["shared_k"] = mk((n_shared, batch, s_cache, kv, hd), jnp.bfloat16)
+        cache["shared_v"] = mk((n_shared, batch, s_cache, kv, hd), jnp.bfloat16)
+    elif cfg.family == "audio":
+        Ld = cfg.num_layers
+        cache["k"] = mk((Ld, batch, s_cache, kv, hd), jnp.bfloat16)
+        cache["v"] = mk((Ld, batch, s_cache, kv, hd), jnp.bfloat16)
+        cache["enc_out"] = mk((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    else:
+        raise ValueError(cfg.family)
+    return cache

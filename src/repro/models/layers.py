@@ -1,0 +1,427 @@
+"""Transformer building blocks: norms, RoPE, chunked (flash-style) attention
+with GQA / sliding-window / cross-attention, SwiGLU MLP, and sort-based MoE.
+
+Conventions
+-----------
+- Params are plain nested dicts of jax.Arrays (pytrees); init_* builds them,
+  the matching apply function consumes them.  No framework dependency.
+- Activations are bf16 (cfg.dtype); softmax statistics, norms and router math
+  run in f32.
+- Sequence mixing uses an online-softmax chunked attention (lax.scan over KV
+  chunks inside a scan over Q chunks) so the (S, S) score matrix is never
+  materialised — required for the 32k prefill shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "layernorm_np":
+        return {}  # olmo-style non-parametric LN: no learnable scale/bias
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm_np":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array) -> jax.Array:
+    """Per-head-dim RMSNorm (qwen3 qk_norm); scale shape (head_dim,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std = d**-0.5
+    dt = _dtype(cfg)
+    p: Params = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * std).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * std).astype(dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), dtype=jnp.float32)
+    return p
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention; never materialises (Sq, Sk) scores.
+
+    GQA runs in FLAT-HEAD form: K/V chunks are broadcast from KV to H heads
+    inside the chunk (a local repeat, free under sharding) so the score
+    tensors carry a single H axis that shards cleanly over the model axis
+    whenever H %% tp == 0 — the factored (KV, H/KV) form defeats SPMD head
+    sharding for every GQA arch with KV < tp (EXPERIMENTS.md Perf it.1).
+
+    Scores/PV matmuls take bf16 inputs with f32 accumulation (MXU-native);
+    softmax statistics stay f32.  ``q_offset`` is the absolute position of
+    q[0]; ``kv_len`` masks cache positions >= kv_len.
+    """
+    from repro.dist.hints import current_mesh, shard
+
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = hd**-0.5
+
+    # Sequence-parallel fallback (EXPERIMENTS.md Perf, qwen3 iteration): when
+    # the head count does not divide the model axis (qwen3: 40 on 16,
+    # whisper: 8 on 16), head sharding is impossible and a replicated-score
+    # constraint makes the partitioner all-gather a 167MB score block on
+    # EVERY kv-chunk step.  Instead shard the q positions over the model
+    # axis: scores stay q-sharded, K/V are materialised whole once per layer.
+    mesh = current_mesh()
+    tp = (
+        mesh.shape["model"]
+        if mesh is not None and "model" in mesh.axis_names
+        else 1
+    )
+    seq_parallel = tp > 1 and h % tp != 0 and sq % tp == 0
+
+    qc = sq if seq_parallel else min(q_chunk, sq)
+    while sq % qc:  # largest divisor fallback keeps odd lengths exact
+        qc -= 1
+    kc = min(kv_chunk, sk)
+    while sk % kc:
+        kc -= 1
+    nq, nk = sq // qc, sk // kc
+
+    if seq_parallel:
+        q_sharded = shard(q, "batch", "tp", None, None)
+    else:
+        q_sharded = shard(q, "batch", None, "tp", None)
+
+    if kv_len is not None:
+        raise ValueError("kv_len masking belongs to _decode_attention")
+
+    # flash custom-VJP: backward recomputes each (qc, kc) block instead of
+    # letting AD save every chunk's probabilities; the GQA KV->H broadcast
+    # happens per chunk inside the kernel so full-length repeated K/V never
+    # hit HBM (models/flash.py)
+    from repro.models.flash import flash_attention
+
+    del scale, rep, nq, nk
+    out = flash_attention(q_sharded, k, v, causal, window, q_offset, qc, kc)
+    return out.astype(q.dtype)
+
+
+def apply_attention(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (B, S)
+    kv_source: Optional[jax.Array] = None,  # cross-attention source
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (K, V) full-length
+    cache_len: Optional[jax.Array] = None,  # valid prefix of the cache
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Self- or cross-attention.  Returns (output, updated_cache).
+
+    Decode: pass cache (B, S_max, KV, hd) and cache_len; x has S=1 (or small);
+    new K/V are written at cache_len and attention runs over the cache.
+    """
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_source is None else kv_source
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    kproj = (src @ p["wk"]).reshape(b, src.shape[1], kv, hd)
+    vproj = (src @ p["wv"]).reshape(b, src.shape[1], kv, hd)
+
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+        kproj = rms_head_norm(p["k_norm"], kproj)
+
+    is_cross = kv_source is not None
+    if not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else positions  # absolute
+        kproj = apply_rope(kproj, kpos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        if cfg.sliding_window and ck.shape[1] == cfg.sliding_window:
+            # ring buffer for SWA: write at cache_len % window
+            idx = jnp.mod(cache_len, cfg.sliding_window)
+            ck = jax.lax.dynamic_update_slice(ck, kproj.astype(ck.dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vproj.astype(cv.dtype), (0, idx, 0, 0))
+            k_all, v_all = ck, cv
+            # ring positions: entry slot j holds absolute position p with
+            # p % window == j and p <= cache_len;  mask below handles validity.
+            valid = jnp.minimum(cache_len + s, cfg.sliding_window)
+            out = _decode_attention(q, k_all, v_all, valid_len=valid)
+            return out @ p["wo"], (ck, cv)
+        ck = jax.lax.dynamic_update_slice(
+            ck, kproj.astype(ck.dtype), (0, cache_len, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cv, vproj.astype(cv.dtype), (0, cache_len, 0, 0)
+        )
+        new_cache = (ck, cv)
+        out = _decode_attention(q, ck, cv, valid_len=cache_len + s)
+        return out @ p["wo"], new_cache
+
+    out = chunked_attention(
+        q,
+        kproj,
+        vproj,
+        causal=causal and not is_cross,
+        window=cfg.sliding_window if not is_cross else 0,
+    )
+    # Forward/prefill mode: hand the roped K/V back so prefill can build the
+    # decode cache without recomputing projections.
+    return out.reshape(b, s, h * hd) @ p["wo"], (kproj, vproj)
+
+
+def _decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, valid_len: jax.Array
+) -> jax.Array:
+    """Small-Sq attention over a (possibly partially-filled) cache.
+
+    Decode keeps the FACTORED GQA einsum (no KV-head repeat): the cache is
+    either KV-head-sharded (kv %% tp == 0) or sequence-sharded, and in both
+    cases the factored contraction needs at most a tiny stats/output psum.
+    A flat-head repeat here lowers to broadcast_in_dim, which the partitioner
+    can only realise by all-gathering the entire cache every layer
+    (EXPERIMENTS.md Perf iteration 2)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qr = q.reshape(b, sq, kvh, rep, hd)
+    s = jnp.einsum(
+        "bqgrh,bkgh->bgrqk", qr, k, preferred_element_type=jnp.float32
+    ) * hd**-0.5
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, :] < valid_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgrqk,bkgh->bqgrh", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, h * hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    std = d**-0.5
+    return {
+        "w1": (jax.random.normal(ks[0], (d, f)) * std).astype(dt),
+        "w3": (jax.random.normal(ks[1], (d, f)) * std).astype(dt),
+        "w2": (jax.random.normal(ks[2], (f, d)) * f**-0.5).astype(dt),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    from repro.dist.hints import shard
+
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = shard(h, "batch", None, "tp")  # (B, S, F) — keep TP on d_ff
+    return h @ p["w2"]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    std = d**-0.5
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * std).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * std).astype(dt),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * std).astype(dt),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * f**-0.5).astype(dt),
+    }
+
+
+def _capacity(tokens_per_row: int, cfg: ModelConfig) -> int:
+    full = tokens_per_row * cfg.experts_per_token
+    if full <= 128:
+        # decode / tiny-row regime: lossless capacity (no token drops, exact
+        # decode parity), padded to the 8-sublane boundary — padding to 128
+        # would inflate expert FLOPs 64x for single-token steps
+        return max(((full + 7) // 8) * 8, cfg.experts_per_token)
+    c = int(full * cfg.capacity_factor / cfg.num_experts)
+    if c >= 128:
+        return ((c + 127) // 128) * 128
+    return max(((c + 7) // 8) * 8, cfg.experts_per_token)
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based top-k MoE with per-batch-row dispatch (no global sort).
+
+    Tokens are routed row-locally: each (batch row) sorts its own S*k
+    token-expert pairs, so the sort never crosses device boundaries under
+    batch sharding.  Dispatch/combine are scatters into an (B, E, C, D)
+    buffer; dropped tokens (beyond capacity C) pass through the residual.
+
+    Returns (output, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = _capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (b,s,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (b,s,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))  # (e,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = gate_idx.reshape(b, s * k)  # (b, sk)
+    flat_w = gate_vals.reshape(b, s * k)
+    order = jnp.argsort(flat_e, axis=1)  # row-local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=1)
+    tok_of = order // k  # source token of each routed slot
+    sk = s * k
+
+    # position within the expert's segment, per row
+    one_hot_counts = jax.nn.one_hot(sorted_e, e, dtype=jnp.int32)  # (b, sk, e)
+    seg_prefix = jnp.cumsum(one_hot_counts, axis=1) - one_hot_counts
+    seg_pos = jnp.take_along_axis(
+        seg_prefix, sorted_e[..., None], axis=2
+    )[..., 0]  # (b, sk)
+    keep = seg_pos < c
+    seg_pos_c = jnp.where(keep, seg_pos, c - 1)
+
+    # SCATTER-FREE dispatch (EXPERIMENTS.md Perf, phi3.5 iteration): a
+    # scatter over the batch-sharded dim makes the SPMD partitioner
+    # replicate the full (b, sk, d) operand and all-reduce it per layer.
+    # Because slots are expert-sorted, expert e's tokens occupy the
+    # contiguous sorted range [starts_e, starts_e + count_e), so the (e, c)
+    # buffer is a pure GATHER at arithmetically-computed indices.
+    counts = jnp.sum(one_hot_counts, axis=1)  # (b, e)
+    starts = jnp.cumsum(counts, axis=1) - counts  # exclusive (b, e)
+    slot_e = jnp.arange(e * c, dtype=jnp.int32) // c  # (e*c,)
+    slot_p = jnp.arange(e * c, dtype=jnp.int32) % c
+    src = starts[:, slot_e] + slot_p[None, :]  # (b, e*c)
+    valid = slot_p[None, :] < counts[:, slot_e]
+    src_c = jnp.minimum(src, sk - 1)
+
+    xin = jnp.take_along_axis(x, tok_of[..., None], axis=1)  # (b, sk, d)
+    buf = jnp.where(
+        valid[..., None],
+        jnp.take_along_axis(xin, src_c[..., None], axis=1),
+        0,
+    ).reshape(b, e, c, d).astype(x.dtype)
+
+    from repro.dist.hints import shard
+
+    if cfg.expert_sharding == "ep":
+        # expert axis shards exactly over model (phi: 16 on 16); the scatter
+        # from batch-sharded tokens into the E-sharded buffer is the all-to-all
+        buf = shard(buf, "batch", "tp", None, None)
+        h = jnp.einsum("becd,edf->becf", buf, p["w1"])
+        g = jnp.einsum("becd,edf->becf", buf, p["w3"])
+        h = shard(h, "batch", "tp", None, None)
+        out_e = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * g, p["w2"])
+        out_e = shard(out_e, "batch", "tp", None, None)
+    else:
+        # expert-TP (mixtral: 8 experts don't divide 16): buffer replicated
+        # over model, expert FFN width sharded; combine all-reduces out_e
+        buf = shard(buf, "batch", None, None, None)
+        h = jnp.einsum("becd,edf->becf", buf, p["w1"])
+        g = jnp.einsum("becd,edf->becf", buf, p["w3"])
+        h = shard(h, "batch", None, None, "tp")
+        out_e = jnp.einsum("becf,efd->becd", jax.nn.silu(h) * g, p["w2"])
+
+    # combine, also scatter-free: gather each sorted slot's expert output
+    # (arithmetic buffer position), un-sort via the inverse permutation, and
+    # reduce the k routed copies per token with a reshape-sum.
+    slot_pos = sorted_e * c + seg_pos_c  # (b, sk) position in (e*c)
+    vals = jnp.take_along_axis(
+        out_e.reshape(b, e * c, d), slot_pos[..., None], axis=1
+    )  # (b, sk, d)
+    vals = vals * jnp.where(keep, sorted_w, 0.0)[..., None].astype(vals.dtype)
+    inv_order = jnp.argsort(order, axis=1)
+    vals = jnp.take_along_axis(vals, inv_order[..., None], axis=1)
+    out = jnp.sum(vals.reshape(b, s, k, d), axis=2)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,148 @@
+"""Public model API: build(config) -> Model with init / forward / prefill /
+decode, abstract (no-allocation) param & input specs for the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import kvcache, transformer
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- params ----
+    def init(self, key: jax.Array) -> Params:
+        return transformer.init_model(key, self.cfg)
+
+    def abstract_params(self) -> Params:
+        return transformer.abstract_params(self.cfg)
+
+    # ---- inputs ----
+    def input_specs(self, shape: ShapeConfig, *, abstract: bool = True) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+        train:   tokens + labels (B, S) [+ context embeddings]
+        prefill: tokens (B, S) [+ context]
+        decode:  tokens (B, 1) + cache + cache_len [+ context]
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+
+        def mk(shp, dtype):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, dtype)
+            return jnp.zeros(shp, dtype)
+
+        specs: Dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            specs["tokens"] = mk((b, s), jnp.int32)
+            if shape.kind == "train":
+                specs["labels"] = mk((b, s), jnp.int32)
+        else:  # decode
+            specs["tokens"] = mk((b, 1), jnp.int32)
+            specs["cache"] = kvcache.init_cache(cfg, b, s, abstract=abstract)
+            specs["cache_len"] = mk((), jnp.int32)
+
+        if cfg.family == "vlm":
+            specs["context"] = mk(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "audio" and shape.kind != "decode":
+            specs["context"] = mk((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    # ---- compute ----
+    def forward(
+        self, params: Params, tokens: jax.Array, *, context=None, remat=True
+    ) -> Tuple[jax.Array, jax.Array]:
+        logits, aux, _ = transformer.forward(
+            params, self.cfg, tokens, context=context, remat=remat
+        )
+        return logits, aux
+
+    def prefill(
+        self, params: Params, tokens: jax.Array, *, context=None, max_len=None
+    ) -> Tuple[jax.Array, Params]:
+        """Forward + decode-cache construction.
+
+        ``max_len`` is the cache capacity (defaults to S + 1 so at least one
+        decode step fits); sliding-window caches are capped at the window."""
+        cfg = self.cfg
+        logits, _, (kvs, ctx) = transformer.forward(
+            params, cfg, tokens, context=context, collect_kv=True
+        )
+        b, s = tokens.shape
+        cache = self._assemble_cache(kvs, ctx, b, s, max_len or (s + 1))
+        return logits, cache
+
+    def _assemble_cache(self, kvs, ctx, b: int, s: int, max_len: int) -> Params:
+        cfg = self.cfg
+        cache: Params = {}
+        w = kvcache.attn_cache_len(cfg, max_len)
+
+        def ring(k):  # (..., S, kv, hd) -> cache layout (..., W, kv, hd)
+            if w >= s:  # dense cache: pad prefix K/V out to capacity
+                pad = [(0, 0)] * k.ndim
+                pad[-3] = (0, w - s)
+                return jnp.pad(k, pad)
+            # sliding window: keep the last w positions, ring-ordered
+            pos = jnp.arange(s - w, s)
+            slots = jnp.mod(pos, w)
+            tail = k[..., s - w :, :, :]
+            out = jnp.zeros(k.shape[:-3] + (w,) + k.shape[-2:], k.dtype)
+            return out.at[..., slots, :, :].set(tail)
+
+        if cfg.family in ("dense", "moe", "audio"):
+            kstack, vstack = kvs  # (L, B, S, kv, hd)
+            cache["k"] = ring(kstack.astype(jnp.bfloat16))
+            cache["v"] = ring(vstack.astype(jnp.bfloat16))
+            if cfg.family == "audio":
+                cache["enc_out"] = ctx.astype(jnp.bfloat16)
+        elif cfg.family == "vlm":
+            kstack, vstack = kvs  # (nseg, seg-1, B, S, kv, hd)
+            n_self = kstack.shape[0] * kstack.shape[1]
+            cache["k"] = ring(
+                kstack.reshape(n_self, *kstack.shape[2:]).astype(jnp.bfloat16)
+            )
+            cache["v"] = ring(
+                vstack.reshape(n_self, *vstack.shape[2:]).astype(jnp.bfloat16)
+            )
+        elif cfg.family == "ssm":
+            cache["h"] = kvs["h"]  # (L, B, di, ns)
+            cache["conv"] = kvs["conv"]
+        elif cfg.family == "hybrid":
+            ssm_caches, shared_kv = kvs
+            L = cfg.num_layers
+            cache["h"] = ssm_caches["h"].reshape(L, *ssm_caches["h"].shape[2:])
+            cache["conv"] = ssm_caches["conv"].reshape(
+                L, *ssm_caches["conv"].shape[2:]
+            )
+            cache["shared_k"] = ring(shared_kv[0].astype(jnp.bfloat16))
+            cache["shared_v"] = ring(shared_kv[1].astype(jnp.bfloat16))
+        return cache
+
+    def decode(
+        self,
+        params: Params,
+        cache: Params,
+        tokens: jax.Array,
+        cache_len: jax.Array,
+        *,
+        context=None,
+    ) -> Tuple[jax.Array, Params]:
+        return transformer.decode_step(
+            params, self.cfg, cache, tokens, cache_len, context=context
+        )
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,364 @@
+"""State-space sequence mixers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Both use a chunked scan: the sequence is split into cfg.ssm_chunk-length
+chunks; within a chunk the recurrence is evaluated in parallel (associative
+scan for Mamba-1, the SSD matmul form for Mamba-2), and a short lax.scan
+carries the SSM state across chunks.  This bounds the materialised state
+tensor to (B, chunk, d_inner, d_state) instead of (B, S, ...), which is what
+makes the 32k prefill and 500k shapes lowerable.
+
+Decode paths are single-step recurrences over an explicit (state, conv_tail)
+cache — O(1) per token, the reason these families run the long_500k cell.
+
+Sharding note: the reference implementations fuse [z|x|B|C|dt] into one
+in_proj; we keep SEPARATE projection leaves so tensor-parallel sharding of
+d_inner never slices across component boundaries (DESIGN.md section 6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: x (B, S, C), w (K, C), b (C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    segs = [xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)]
+    return sum(segs) + b[None, None, :]
+
+
+def _conv_step(window: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """One-token conv: window (B, K, C) holds the last K raw inputs."""
+    return jnp.einsum("bkc,kc->bc", window, w) + b
+
+
+def _chunks(t: jax.Array, nchunk: int, lc: int) -> jax.Array:
+    b = t.shape[0]
+    return jnp.moveaxis(t.reshape(b, nchunk, lc, *t.shape[2:]), 1, 0)
+
+
+def _chunk_len(cfg: ModelConfig, s_len: int) -> int:
+    lc = min(cfg.ssm_chunk, s_len)
+    while s_len % lc:  # largest divisor fallback (exactness > speed)
+        lc -= 1
+    return lc
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, s, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    dt = _dt(cfg)
+    std = d**-0.5
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[6], (di,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    )
+    return {
+        "in_x": (jax.random.normal(ks[0], (d, di)) * std).astype(dt),
+        "in_z": (jax.random.normal(ks[1], (d, di)) * std).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (k, di)) * k**-0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dtype=dt),
+        "xp_dt": (jax.random.normal(ks[3], (di, r)) * di**-0.5).astype(dt),
+        "xp_B": (jax.random.normal(ks[4], (di, s)) * di**-0.5).astype(dt),
+        "xp_C": (jax.random.normal(ks[5], (di, s)) * di**-0.5).astype(dt),
+        "dt_proj": (jax.random.normal(ks[7], (r, di)) * r**-0.5).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)).astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, s + 1, dtype=jnp.float32), (di, s))
+        ),
+        "D": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": (
+            jax.random.normal(ks[6], (di, d)) * di**-0.5
+        ).astype(dt),
+    }
+
+
+def apply_mamba1(
+    p: Params, x: jax.Array, cfg: ModelConfig, *, return_cache: bool = False
+):
+    """Full-sequence forward, chunked scan.  x: (B, S, D) -> (B, S, D).
+
+    With return_cache=True also returns {h, conv}: final SSM state + the last
+    ssm_conv-1 raw conv inputs, matching decode_mamba1's cache exactly."""
+    b, s_len, _ = x.shape
+    di, ns = cfg.d_inner, cfg.ssm_state
+    lc = _chunk_len(cfg, s_len)
+    nchunk = s_len // lc
+
+    from repro.dist.hints import shard
+
+    xin_raw = shard(x @ p["in_x"], "batch", None, "tp")
+    z = x @ p["in_z"]
+    xin = jax.nn.silu(_causal_conv(xin_raw, p["conv_w"], p["conv_b"]))
+
+    dtl = xin @ p["xp_dt"]
+    bmat = xin @ p["xp_B"]
+    cmat = xin @ p["xp_C"]
+    dt = jax.nn.softplus(
+        dtl.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"]
+    )  # (b, s, di)
+    dt = shard(dt, "batch", None, "tp")
+    A = -jnp.exp(p["A_log"])  # (di, ns)
+
+    # Perf note (EXPERIMENTS.md section Perf, falcon-mamba iteration): the
+    # (b, S, di, ns) discretised tensors dA/dBx and the state trajectory hs
+    # are NEVER materialised at full sequence length — they are built
+    # chunk-locally inside the scan and contracted against C within the
+    # chunk, bounding the working set to (b, lc, di, ns).
+    def outer(h, inputs):
+        dt_c, b_c, c_c, x_c = inputs  # (b,lc,di) (b,lc,ns) (b,lc,ns) (b,lc,di)
+        da_c = jnp.exp(dt_c[..., None] * A[None, None])  # (b, lc, di, ns)
+        dbx_c = (
+            dt_c[..., None]
+            * b_c.astype(jnp.float32)[:, :, None, :]
+            * x_c.astype(jnp.float32)[..., None]
+        )
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        dbx0 = dbx_c.at[:, 0].add(da_c[:, 0] * h)
+        _, b_scan = jax.lax.associative_scan(combine, (da_c, dbx0), axis=1)
+        y_c = jnp.einsum("bldn,bln->bld", b_scan, c_c.astype(jnp.float32))
+        return b_scan[:, -1], y_c
+
+    h0 = shard(jnp.zeros((b, di, ns), dtype=jnp.float32), "batch", "tp", None)
+    h_final, ys = jax.lax.scan(
+        outer,
+        h0,
+        (
+            _chunks(dt, nchunk, lc),
+            _chunks(bmat, nchunk, lc),
+            _chunks(cmat, nchunk, lc),
+            _chunks(xin, nchunk, lc),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, di)
+
+    y = y + p["D"][None, None] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_cache:
+        tail = xin_raw[:, -(cfg.ssm_conv - 1) :, :]
+        return out, {"h": h_final, "conv": tail.astype(jnp.bfloat16)}
+    return out
+
+
+def mamba1_cache_shape(cfg: ModelConfig, batch: int):
+    return {
+        "h": (batch, cfg.d_inner, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_inner),
+    }
+
+
+def decode_mamba1(
+    p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, Params]:
+    """Single-token step.  x: (B, 1, D); cache: {h, conv}."""
+    ns = cfg.ssm_state
+    xin_raw = x[:, 0] @ p["in_x"]
+    z = x[:, 0] @ p["in_z"]
+    window = jnp.concatenate(
+        [cache["conv"].astype(xin_raw.dtype), xin_raw[:, None, :]], axis=1
+    )  # (b, k, di)
+    xin = jax.nn.silu(_conv_step(window, p["conv_w"], p["conv_b"]))
+    dt = jax.nn.softplus(
+        (xin @ p["xp_dt"]).astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"]
+    )
+    bvec = xin @ p["xp_B"]
+    cvec = xin @ p["xp_C"]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])  # (b, di, ns)
+    dBx = (
+        dt[..., None]
+        * bvec.astype(jnp.float32)[:, None, :]
+        * xin.astype(jnp.float32)[..., None]
+    )
+    h = cache["h"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, cvec.astype(jnp.float32))
+    y = y + p["D"][None] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    del ns
+    return out, {"h": h, "conv": window[:, 1:, :].astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    dt = _dt(cfg)
+    std = d**-0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * std).astype(dt),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * std).astype(dt),
+        "w_B": (jax.random.normal(ks[2], (d, ns)) * std).astype(dt),
+        "w_C": (jax.random.normal(ks[3], (d, ns)) * std).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (d, nh)) * std).astype(jnp.float32),
+        "conv_x": (jax.random.normal(ks[5], (k, di)) * k**-0.5).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dtype=dt),
+        "conv_B": (jax.random.normal(ks[6], (k, ns)) * k**-0.5).astype(dt),
+        "conv_B_b": jnp.zeros((ns,), dtype=dt),
+        "conv_C": (jax.random.normal(ks[7], (k, ns)) * k**-0.5).astype(dt),
+        "conv_C_b": jnp.zeros((ns,), dtype=dt),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[8], (nh,), minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di**-0.5).astype(dt),
+    }
+
+
+def _gated_rmsnorm(x: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+def apply_mamba2(
+    p: Params, x: jax.Array, cfg: ModelConfig, *, return_cache: bool = False
+):
+    """SSD chunked forward.  x: (B, S, D) -> (B, S, D)."""
+    b, s_len, _ = x.shape
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    lc = _chunk_len(cfg, s_len)
+    nchunk = s_len // lc
+
+    from repro.dist.hints import shard
+
+    z = x @ p["w_z"]
+    x_raw = shard(x @ p["w_x"], "batch", None, "tp")
+    b_raw = x @ p["w_B"]
+    c_raw = x @ p["w_C"]
+    dtl = x @ p["w_dt"]
+    xin = jax.nn.silu(_causal_conv(x_raw, p["conv_x"], p["conv_x_b"]))
+    bmat = jax.nn.silu(_causal_conv(b_raw, p["conv_B"], p["conv_B_b"]))
+    cmat = jax.nn.silu(_causal_conv(c_raw, p["conv_C"], p["conv_C_b"]))
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"])  # (b, s, nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    da = dt * A[None, None]  # log-decay per step
+
+    xh = xin.reshape(b, s_len, nh, hd).astype(jnp.float32) * dt[..., None]
+    xh = shard(xh, "batch", None, "tp", None)  # heads over model
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    def outer(h, inputs):
+        # h: (b, nh, hd, ns)
+        da_c, x_c, b_c, c_c = inputs
+        seg = jnp.cumsum(da_c, axis=1)  # (b, lc, nh)
+        rel = seg[:, :, None, :] - seg[:, None, :, :]
+        causal = jnp.tril(jnp.ones((rel.shape[1], rel.shape[1]), dtype=bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", c_c, b_c)
+        y_intra = jnp.einsum("bqk,bqkh,bkhd->bqhd", cb, decay, x_c)
+        y_inter = jnp.einsum("bqn,bhdn,bqh->bqhd", c_c, h, jnp.exp(seg))
+        to_end = jnp.exp(seg[:, -1:, :] - seg)
+        new_h = h * jnp.exp(seg[:, -1])[:, :, None, None] + jnp.einsum(
+            "bkn,bkhd,bkh->bhdn", b_c, x_c, to_end
+        )
+        return new_h, y_intra + y_inter
+
+    h0 = shard(
+        jnp.zeros((b, nh, hd, ns), dtype=jnp.float32),
+        "batch", "tp", None, None,
+    )
+    h_final, ys = jax.lax.scan(
+        outer,
+        h0,
+        (
+            _chunks(da, nchunk, lc),
+            _chunks(xh, nchunk, lc),
+            _chunks(bf, nchunk, lc),
+            _chunks(cf, nchunk, lc),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, nh, hd)
+    y = y + p["D"][None, None, :, None] * xin.reshape(
+        b, s_len, nh, hd
+    ).astype(jnp.float32)
+    y = y.reshape(b, s_len, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_cache:
+        tail = jnp.concatenate([x_raw, b_raw, c_raw], axis=-1)[
+            :, -(cfg.ssm_conv - 1) :, :
+        ]
+        return out, {"h": h_final, "conv": tail.astype(jnp.bfloat16)}
+    return out
+
+
+def mamba2_cache_shape(cfg: ModelConfig, batch: int):
+    return {
+        "h": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+    }
+
+
+def decode_mamba2(
+    p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+) -> Tuple[jax.Array, Params]:
+    b = x.shape[0]
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    z = x[:, 0] @ p["w_z"]
+    x_raw = x[:, 0] @ p["w_x"]
+    b_raw = x[:, 0] @ p["w_B"]
+    c_raw = x[:, 0] @ p["w_C"]
+    dtl = x[:, 0] @ p["w_dt"]
+    new_raw = jnp.concatenate([x_raw, b_raw, c_raw], axis=-1)
+    window = jnp.concatenate(
+        [cache["conv"].astype(new_raw.dtype), new_raw[:, None, :]], axis=1
+    )  # (b, k, di + 2ns)
+    wx, wb, wc = jnp.split(window, [di, di + ns], axis=-1)
+    xin = jax.nn.silu(_conv_step(wx, p["conv_x"], p["conv_x_b"]))
+    bvec = jax.nn.silu(_conv_step(wb, p["conv_B"], p["conv_B_b"]))
+    cvec = jax.nn.silu(_conv_step(wc, p["conv_C"], p["conv_C_b"]))
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + p["dt_bias"])  # (b, nh)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A[None])
+    xh = xin.reshape(b, nh, hd).astype(jnp.float32) * dt[..., None]
+    h = cache["h"] * da[..., None, None] + jnp.einsum(
+        "bn,bhd->bhdn", bvec.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhdn->bhd", cvec.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xin.reshape(b, nh, hd).astype(jnp.float32)
+    y = y.reshape(b, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return (y @ p["out_proj"])[:, None, :], {
+        "h": h,
+        "conv": window[:, 1:, :].astype(jnp.bfloat16),
+    }

@@ -1,0 +1,478 @@
+"""Model assembly for all six families: block init, scan-over-layers forward,
+prefill (forward + cache build) and single-token decode.
+
+Layer stacks are HOMOGENEOUS groups of stacked params scanned with lax.scan —
+this keeps the HLO size O(1) in depth (one block body regardless of 16 or 100
+layers), which is what makes 512-device dry-run compiles tractable.
+
+Heterogeneous schedules are expressed as nested scans over segments:
+  vlm    : [ (segment-1) self layers | 1 cross layer ] x n_segments
+  hybrid : [ k mamba2 layers | shared (weight-tied) attention block ] x n_seg
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    return {
+        "dense": "attn_mlp",
+        "vlm": "attn_mlp",
+        "moe": "attn_moe",
+        "ssm": "mamba1",
+        "hybrid": "mamba2",
+        "audio": "dec_cross",  # decoder blocks: self + cross + mlp
+    }[cfg.family]
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "attn_mlp":
+        return {
+            "ln1": L.init_norm(cfg, d),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_norm(cfg, d),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": L.init_norm(cfg, d),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_norm(cfg, d),
+            "moe": L.init_moe(ks[1], cfg),
+        }
+    if kind == "mamba1":
+        return {"ln1": L.init_norm(cfg, d), "mixer": S.init_mamba1(ks[0], cfg)}
+    if kind == "mamba2":
+        return {"ln1": L.init_norm(cfg, d), "mixer": S.init_mamba2(ks[0], cfg)}
+    if kind == "cross_mlp":  # vlm cross-attention layer
+        return {
+            "ln1": L.init_norm(cfg, d),
+            "xattn": L.init_attention(ks[0], cfg, cross=True),
+            "ln2": L.init_norm(cfg, d),
+            "mlp": L.init_mlp(ks[1], cfg),
+            "gate": jnp.zeros((), dtype=jnp.float32),  # zero-init gated cross
+        }
+    if kind == "dec_cross":  # whisper decoder layer
+        return {
+            "ln1": L.init_norm(cfg, d),
+            "attn": L.init_attention(ks[0], cfg),
+            "lnx": L.init_norm(cfg, d),
+            "xattn": L.init_attention(ks[1], cfg, cross=True),
+            "ln2": L.init_norm(cfg, d),
+            "mlp": L.init_mlp(ks[2], cfg),
+        }
+    raise ValueError(kind)
+
+
+def apply_block(
+    bp: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,
+    context: Optional[jax.Array] = None,  # image / encoder embeddings
+    causal: bool = True,
+    collect_cache: bool = False,
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """Full-sequence block.  Returns (x, aux_loss, cache_piece).
+
+    cache_piece is (roped K, V) for attention kinds and {h, conv} for SSM
+    kinds when collect_cache is set (prefill); None otherwise for SSM."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    kv = None
+    if kind in ("attn_mlp", "attn_moe", "dec_cross"):
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        a, kv = L.apply_attention(
+            bp["attn"], h, cfg, positions=positions, causal=causal
+        )
+        x = x + a
+        if kind == "dec_cross":
+            h = L.apply_norm(bp["lnx"], x, cfg)
+            a, _ = L.apply_attention(
+                bp["xattn"], h, cfg, positions=positions, kv_source=context
+            )
+            x = x + a
+        h = L.apply_norm(bp["ln2"], x, cfg)
+        if kind == "attn_moe":
+            m, aux = L.apply_moe(bp["moe"], h, cfg)
+        else:
+            m = L.apply_mlp(bp["mlp"], h)
+        x = x + m
+    elif kind == "cross_mlp":
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        a, _ = L.apply_attention(
+            bp["xattn"], h, cfg, positions=positions, kv_source=context
+        )
+        x = x + jnp.tanh(bp["gate"]).astype(x.dtype) * a
+        h = L.apply_norm(bp["ln2"], x, cfg)
+        x = x + L.apply_mlp(bp["mlp"], h)
+    elif kind == "mamba1":
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        if collect_cache:
+            o, kv = S.apply_mamba1(bp["mixer"], h, cfg, return_cache=True)
+        else:
+            o = S.apply_mamba1(bp["mixer"], h, cfg)
+        x = x + o
+    elif kind == "mamba2":
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        if collect_cache:
+            o, kv = S.apply_mamba2(bp["mixer"], h, cfg, return_cache=True)
+        else:
+            o = S.apply_mamba2(bp["mixer"], h, cfg)
+        x = x + o
+    else:
+        raise ValueError(kind)
+    return x, aux, kv
+
+
+def decode_block(
+    bp: Params,
+    x: jax.Array,
+    cache: Params,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,
+    cache_len: jax.Array,
+    context: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Params]:
+    """Single-step block over the decode cache."""
+    if kind in ("attn_mlp", "attn_moe", "dec_cross"):
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        a, new_kv = L.apply_attention(
+            bp["attn"],
+            h,
+            cfg,
+            positions=positions,
+            cache=(cache["k"], cache["v"]),
+            cache_len=cache_len,
+        )
+        x = x + a
+        new_cache = {"k": new_kv[0], "v": new_kv[1]}
+        if kind == "dec_cross":
+            h = L.apply_norm(bp["lnx"], x, cfg)
+            a, _ = L.apply_attention(
+                bp["xattn"], h, cfg, positions=positions, kv_source=context
+            )
+            x = x + a
+        h = L.apply_norm(bp["ln2"], x, cfg)
+        if kind == "attn_moe":
+            m, _ = L.apply_moe(bp["moe"], h, cfg)
+        else:
+            m = L.apply_mlp(bp["mlp"], h)
+        return x + m, new_cache
+    if kind == "mamba1":
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        o, nc = S.decode_mamba1(bp["mixer"], h, {"h": cache["h"], "conv": cache["conv"]}, cfg)
+        return x + o, nc
+    if kind == "mamba2":
+        h = L.apply_norm(bp["ln1"], x, cfg)
+        o, nc = S.decode_mamba2(bp["mixer"], h, {"h": cache["h"], "conv": cache["conv"]}, cfg)
+        return x + o, nc
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key: jax.Array, cfg: ModelConfig, kind: str, n: int) -> Params:
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(jax.random.split(key, n))
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Build the full parameter pytree (stacked per homogeneous group)."""
+    ks = jax.random.split(key, 8)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    params: Params = {
+        "embed": (
+            jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dt),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    kind = block_kind(cfg)
+    if cfg.family == "vlm":
+        seg = cfg.cross_attn_segment
+        nseg = cfg.num_layers // seg
+        params["blocks"] = _stack_init(ks[1], cfg, "attn_mlp", nseg * (seg - 1))
+        params["cross_blocks"] = _stack_init(ks[2], cfg, "cross_mlp", nseg)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(ks[1], cfg, "mamba2", cfg.num_layers)
+        params["shared_attn"] = init_block(ks[2], cfg, "attn_mlp")
+    elif cfg.family == "audio":
+        params["enc_pos"] = (
+            jax.random.normal(ks[3], (cfg.encoder_seq, cfg.d_model)) * 0.02
+        ).astype(dt)
+        params["enc_blocks"] = _stack_init(ks[4], cfg, "attn_mlp", cfg.encoder_layers)
+        params["enc_norm"] = L.init_norm(cfg, cfg.d_model)
+        params["blocks"] = _stack_init(ks[1], cfg, "dec_cross", cfg.num_layers)
+    else:
+        params["blocks"] = _stack_init(ks[1], cfg, kind, cfg.num_layers)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """ShapeDtypeStruct pytree — dry-run lowering without allocation."""
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(seed), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(
+    stack: Params,
+    x: jax.Array,
+    fn,
+    *,
+    collect_kv: bool,
+):
+    """Scan a homogeneous stacked group; fn(bp, x) -> (x, aux, kv)."""
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a, kv = fn(bp, x)
+        return (x, aux + a), (kv if collect_kv else None)
+
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+    return x, aux, kvs
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    context: Optional[jax.Array] = None,  # vlm image / audio frame embeddings
+    collect_kv: bool = False,
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """Full-sequence forward.  Returns (logits, aux_loss, cache_kvs)."""
+    from repro.dist.hints import shard
+
+    b, s_len = tokens.shape
+    x = shard(params["embed"][tokens], "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32)[None], (b, s_len))
+    kind = block_kind(cfg)
+
+    if cfg.family == "audio":
+        context = _encode_audio(params, cfg, context)
+
+    def mk_fn(k, ctx=None, causal=True):
+        f = lambda bp, x: apply_block(
+            bp, x, cfg, k, positions=positions, context=ctx, causal=causal,
+            collect_cache=collect_kv,
+        )
+        if remat:
+            # full remat (save nothing): the dots-saveable policy was tried
+            # and REFUTED — it stores every matmul output across 95 scanned
+            # layers (563 GB/chip temp on deepseek, 35x over HBM) for only a
+            # 17% t_comp win (EXPERIMENTS.md Perf iteration 6)
+            f = jax.checkpoint(f)
+        return f
+
+    aux = jnp.zeros((), jnp.float32)
+    kvs = None
+    if cfg.family == "vlm":
+        seg = cfg.cross_attn_segment
+        nseg = cfg.num_layers // seg
+        self_stack = jax.tree.map(
+            lambda a: a.reshape(nseg, seg - 1, *a.shape[1:]), params["blocks"]
+        )
+        self_fn = mk_fn("attn_mlp")
+        cross_fn = mk_fn("cross_mlp", ctx=context)
+
+        def seg_body(carry, xs):
+            x, aux = carry
+            sp, cp = xs
+
+            def inner(c, bp):
+                y, a, kv = self_fn(bp, c[0])
+                return (y, c[1] + a), kv
+
+            (x, aux), kv_seg = jax.lax.scan(inner, (x, aux), sp)
+            x, a, _ = cross_fn(cp, x)
+            return (x, aux + a), (kv_seg if collect_kv else None)
+
+        (x, aux), kvs = jax.lax.scan(
+            seg_body, (x, aux), (self_stack, params["cross_blocks"])
+        )
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        nseg = cfg.num_layers // every
+        stack = jax.tree.map(
+            lambda a: a.reshape(nseg, every, *a.shape[1:]), params["blocks"]
+        )
+        m_fn = mk_fn("mamba2")
+        sh_fn = mk_fn("attn_mlp")
+
+        def seg_body(carry, sp):
+            x, aux = carry
+
+            def inner(c, bp):
+                y, a, sc = m_fn(bp, c[0])
+                return (y, c[1] + a), (sc if collect_kv else None)
+
+            (x, aux), ssm_caches = jax.lax.scan(inner, (x, aux), sp)
+            x, a, kv = sh_fn(params["shared_attn"], x)
+            return (x, aux + a), (
+                (ssm_caches, kv) if collect_kv else None
+            )
+
+        (x, aux), kvs = jax.lax.scan(seg_body, (x, aux), stack)
+    else:
+        fn = mk_fn(kind, ctx=context)
+        x, aux, kvs = _scan_stack(params["blocks"], x, fn, collect_kv=collect_kv)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    logits = shard(logits, "batch", None, "tp")  # vocab stays TP-sharded
+    return logits, aux, (kvs, context)
+
+
+def _encode_audio(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub conv-frontend frame embeddings (B, Se, D)."""
+    x = frames + params["enc_pos"][None].astype(frames.dtype)
+    b, se = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None], (b, se))
+
+    def fn(bp, x):
+        return apply_block(
+            bp, x, cfg, "attn_mlp", positions=positions, causal=False
+        )
+
+    x, _, _ = _scan_stack(
+        params["enc_blocks"], x, jax.checkpoint(fn), collect_kv=False
+    )
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token over cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    tokens: jax.Array,  # (B, 1)
+    cache_len: jax.Array,  # scalar int32: tokens already in cache
+    *,
+    context: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Params]:
+    """One decode step.  Returns (logits (B, 1, V), new_cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    kind = block_kind(cfg)
+
+    if cfg.family == "audio":
+        context = cache["enc_out"]
+        kind = "dec_cross"
+
+    def fn(bp, x, cslice, k=kind, ctx=None):
+        return decode_block(
+            bp, x, cslice, cfg, k,
+            positions=positions, cache_len=cache_len, context=ctx,
+        )
+
+    new_cache = dict(cache)
+    if cfg.family == "vlm":
+        seg = cfg.cross_attn_segment
+        nseg = cfg.num_layers // seg
+        n_self = nseg * (seg - 1)
+        self_stack = jax.tree.map(
+            lambda a: a.reshape(nseg, seg - 1, *a.shape[1:]), params["blocks"]
+        )
+        kv_stack = {
+            "k": cache["k"][:n_self].reshape(nseg, seg - 1, *cache["k"].shape[1:]),
+            "v": cache["v"][:n_self].reshape(nseg, seg - 1, *cache["v"].shape[1:]),
+        }
+
+        def seg_body(x, xs):
+            sp, cp, cs = xs
+
+            def inner(c, bpc):
+                bp, cc = bpc
+                y, nc = fn(bp, c, cc, k="attn_mlp")
+                return y, nc
+
+            x, ncs = jax.lax.scan(inner, x, (sp, cs))
+            x, _, _ = apply_block(
+                cp, x, cfg, "cross_mlp", positions=positions, context=context
+            )
+            return x, ncs
+
+        x, new_kv = jax.lax.scan(
+            seg_body, x, (self_stack, params["cross_blocks"], kv_stack)
+        )
+        new_cache["k"] = new_kv["k"].reshape(n_self, *cache["k"].shape[1:])
+        new_cache["v"] = new_kv["v"].reshape(n_self, *cache["v"].shape[1:])
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        nseg = cfg.num_layers // every
+        stack = jax.tree.map(
+            lambda a: a.reshape(nseg, every, *a.shape[1:]), params["blocks"]
+        )
+        ssm_cache = jax.tree.map(
+            lambda a: a.reshape(nseg, every, *a.shape[1:]),
+            {"h": cache["h"], "conv": cache["conv"]},
+        )
+        shared_cache = {"k": cache["shared_k"], "v": cache["shared_v"]}
+
+        def seg_body(x, xs):
+            sp, sc, shc = xs
+
+            def inner(c, bpc):
+                bp, cc = bpc
+                y, nc = fn(bp, c, cc, k="mamba2")
+                return y, nc
+
+            x, ncs = jax.lax.scan(inner, x, (sp, sc))
+            x, nsh = fn(params["shared_attn"], x, shc, k="attn_mlp")
+            return x, (ncs, nsh)
+
+        x, (new_ssm, new_shared) = jax.lax.scan(
+            seg_body, x, (stack, ssm_cache, shared_cache)
+        )
+        new_cache["h"] = new_ssm["h"].reshape(cfg.num_layers, *cache["h"].shape[1:])
+        new_cache["conv"] = new_ssm["conv"].reshape(cfg.num_layers, *cache["conv"].shape[1:])
+        new_cache["shared_k"] = new_shared["k"]
+        new_cache["shared_v"] = new_shared["v"]
+    else:
+        cache_keys = ["h", "conv"] if cfg.family == "ssm" else ["k", "v"]
+        cstack = {k: cache[k] for k in cache_keys}
+
+        def body(x, xs):
+            bp, cc = xs
+            y, nc = fn(bp, x, cc, ctx=context)
+            return y, nc
+
+        x, ncs = jax.lax.scan(body, x, (params["blocks"], cstack))
+        for k in cache_keys:
+            new_cache[k] = ncs[k]
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    return logits, new_cache

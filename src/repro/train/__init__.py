@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train/prefill/decode step builders."""
+
+from repro.train import optimizer, steps
+
+__all__ = ["optimizer", "steps"]

@@ -1,0 +1,96 @@
+"""AdamW with f32 master weights, global-norm clipping and a cosine schedule.
+
+Optimizer state shards exactly like the parameters (FSDP over "data"), so
+per-chip optimizer memory is 12 bytes / param / fsdp_degree.  No optax
+dependency — the update is ~30 lines of jnp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: Any  # f32 tree
+    nu: Any  # f32 tree
+    master: Any  # f32 master weights
+
+
+def init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+        master=master,
+    )
+
+
+def abstract_state(params: Any) -> OptState:
+    return jax.eval_shape(init, params)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    frac = (s - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * jnp.clip(frac, 0.0, 1.0)))
+    return cfg.lr * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    )
+    return jnp.sqrt(sum(leaves))
+
+
+def update(
+    cfg: OptConfig, grads: Any, state: OptState, params: Any
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new bf16 params, new state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        m = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * m)
+        return mu, nu, m
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(
+        lambda m, p: m.astype(p.dtype), master, params
+    )
+    new_state = OptState(step=step, mu=mu, nu=nu, master=master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

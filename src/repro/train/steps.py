@@ -1,0 +1,97 @@
+"""jit-able train / prefill / decode steps with sharding annotations.
+
+``make_train_step`` / ``make_prefill_step`` / ``make_decode_step`` return
+closures suitable for jax.jit(..., in_shardings=..., out_shardings=...) —
+the launch layer (launch/dryrun.py, launch/train.py) owns the jit call so the
+same step functions serve real execution, smoke tests, and dry-run lowering.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.train import optimizer as opt_lib
+
+AUX_LOSS_COEF = 0.01
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean token NLL + accuracy; logits f32 (B, S, V), labels (B, S).
+
+    TP-friendly: the gold logit is extracted with a masked reduction over the
+    (model-sharded) vocab axis instead of take_along_axis — a gather over a
+    sharded dim would force XLA to all-gather the full logits tensor."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    hit = vocab_ids == labels[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return nll, acc
+
+
+def make_loss_fn(model: Model) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = model.forward(
+            params, batch["tokens"], context=batch.get("context")
+        )
+        nll, acc = cross_entropy(logits, batch["labels"])
+        loss = nll + AUX_LOSS_COEF * aux
+        return loss, {"nll": nll, "aux": aux, "acc": acc}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: Optional[opt_lib.OptConfig] = None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt_cfg = opt_cfg or opt_lib.OptConfig()
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = opt_lib.update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, *, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(
+            params,
+            batch["tokens"],
+            context=batch.get("context"),
+            max_len=max_len,
+        )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, sample: bool = False):
+    """One token in, one token out (greedy unless sample=True)."""
+
+    def decode_step(params, batch):
+        logits, cache = model.decode(
+            params,
+            batch["cache"],
+            batch["tokens"],
+            batch["cache_len"],
+            context=batch.get("context"),
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step

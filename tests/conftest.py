@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src layout without install; tests must NOT import repro.launch.dryrun
+# (it forces 512 host devices).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

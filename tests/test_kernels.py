@@ -1,0 +1,114 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py),
+shape/dtype sweeps + hypothesis property tests, all in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import magm
+from repro.kernels import ops, ref
+from repro.kernels.quadrant_descent import TILE, quadrant_descent
+
+THETA = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)
+
+
+def _thetas(d):
+    return jnp.asarray(np.broadcast_to(THETA, (d, 2, 2)).copy())
+
+
+def _cum(thetas):
+    flat = thetas.reshape(-1, 4)
+    return jnp.cumsum(flat / flat.sum(axis=1, keepdims=True), axis=1)
+
+
+@pytest.mark.parametrize("d", [1, 4, 12, 20, 31])
+@pytest.mark.parametrize("n", [TILE, 4 * TILE])
+def test_quadrant_descent_shapes(d, n):
+    thetas = _thetas(d)
+    u = jax.random.uniform(jax.random.PRNGKey(d), (n, d))
+    s1, t1 = quadrant_descent(u, _cum(thetas), interpret=True)
+    s2, t2 = ref.quadrant_descent_ref(u, _cum(thetas))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert s1.dtype == jnp.int32
+
+
+@given(st.integers(min_value=1, max_value=24), st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_quadrant_descent_property(d, seed):
+    thetas = _thetas(d)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), (TILE, d))
+    s1, t1 = quadrant_descent(u, _cum(thetas), interpret=True)
+    s2, t2 = ref.quadrant_descent_ref(u, _cum(thetas))
+    assert bool((s1 == s2).all() and (t1 == t2).all())
+    assert int(s1.max()) < 2**d and int(s1.min()) >= 0
+
+
+def test_sample_edge_batch_pallas_distribution():
+    d = 6
+    thetas = _thetas(d)
+    src, dst = ops.sample_edge_batch_pallas(
+        jax.random.PRNGKey(0), thetas, 8000
+    )
+    a = (np.asarray(src) >= 2 ** (d - 1)).astype(int)
+    b = (np.asarray(dst) >= 2 ** (d - 1)).astype(int)
+    frac = np.bincount(2 * a + b, minlength=4) / 8000
+    np.testing.assert_allclose(frac, THETA.reshape(-1) / THETA.sum(), atol=0.03)
+
+
+@pytest.mark.parametrize("ns,nt,d", [(8, 8, 3), (100, 260, 7), (256, 256, 12), (300, 513, 20)])
+def test_magm_logprob_kernel(ns, nt, d):
+    thetas = _thetas(d)
+    mu = jnp.full((d,), 0.4)
+    F1 = magm.sample_attributes(jax.random.PRNGKey(1), ns, mu)
+    F2 = magm.sample_attributes(jax.random.PRNGKey(2), nt, mu)
+    got = ops.magm_logprob_pallas(F1, F2, thetas)
+    want = magm.log_edge_prob(F1, F2, thetas)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_magm_logprob_against_entrywise_product():
+    """Kernel == direct product over attributes (paper eq. 7)."""
+    d, ns = 5, 16
+    thetas = _thetas(d)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(3), ns, jnp.full((d,), 0.5))
+    )
+    got = np.exp(np.asarray(ops.magm_logprob_pallas(jnp.asarray(F), jnp.asarray(F), thetas)))
+    for i in range(ns):
+        for j in range(ns):
+            want = np.prod([THETA[F[i, k], F[j, k]] for k in range(d)])
+            assert abs(got[i, j] - want) < 1e-4
+
+
+def test_bernoulli_tile_rate():
+    d, n = 8, 512
+    thetas = _thetas(d)
+    mu = jnp.full((d,), 0.5)
+    F = magm.sample_attributes(jax.random.PRNGKey(5), n, mu)
+    mask = ops.bernoulli_sample_pallas(jax.random.PRNGKey(6), F, F, thetas)
+    q = np.exp(np.asarray(magm.log_edge_prob(F, F, thetas)))
+    rate, expect = float(np.asarray(mask).mean()), q.mean()
+    assert abs(rate - expect) < 5 * np.sqrt(expect / mask.size) + 1e-4
+
+
+def test_bernoulli_tile_matches_ref_with_same_uniforms():
+    d, n = 6, 256
+    thetas = _thetas(d)
+    F = magm.sample_attributes(jax.random.PRNGKey(8), n, jnp.full((d,), 0.5))
+    bl = magm.bilinear_decompose(thetas)
+    fs = F.astype(jnp.float32)
+    logu = jnp.log(
+        jax.random.uniform(jax.random.PRNGKey(9), (n, n), minval=1e-38, maxval=1.0)
+    )
+    from repro.kernels.bernoulli_tile import bernoulli_tile
+
+    got = bernoulli_tile(
+        fs, fs,
+        bl.u[None, :], bl.v[None, :], bl.w[None, :], bl.c0.reshape(1, 1),
+        logu, interpret=True,
+    )
+    want = ref.bernoulli_tile_ref(fs, fs, bl.u, bl.v, bl.w, bl.c0, logu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,79 @@
+"""KPGM: moments, edge-probability structure, Algorithm-1 sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kpgm
+
+THETA = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)
+
+
+def test_edge_prob_matrix_is_kronecker_power():
+    params = kpgm.make_params(THETA, 3)
+    p = np.asarray(kpgm.edge_prob_matrix(params.thetas))
+    expect = np.kron(np.kron(THETA, THETA), THETA)
+    np.testing.assert_allclose(p, expect, rtol=1e-5)
+
+
+def test_moments_match_dense_matrix():
+    params = kpgm.make_params(THETA, 4)
+    m, v = kpgm.edge_moments(params.thetas)
+    p = np.asarray(kpgm.edge_prob_matrix(params.thetas))
+    np.testing.assert_allclose(float(m), p.sum(), rtol=1e-4)
+    np.testing.assert_allclose(float(v), (p**2).sum(), rtol=1e-4)
+
+
+def test_log_prob_pairs_matches_matrix():
+    params = kpgm.make_params(THETA, 5)
+    p = np.asarray(kpgm.edge_prob_matrix(params.thetas))
+    src = jnp.array([0, 3, 17, 31], dtype=jnp.int32)
+    dst = jnp.array([1, 0, 30, 31], dtype=jnp.int32)
+    lp = np.asarray(kpgm.log_prob_pairs(params.thetas, src, dst))
+    np.testing.assert_allclose(
+        np.exp(lp), p[np.asarray(src), np.asarray(dst)], rtol=1e-4
+    )
+
+
+def test_sampler_ids_in_range_and_unique():
+    params = kpgm.make_params(THETA, 8)
+    edges = kpgm.kpgm_sample(jax.random.PRNGKey(0), params)
+    assert edges.ndim == 2 and edges.shape[1] == 2
+    assert edges.min() >= 0 and edges.max() < 256
+    flat = edges[:, 0] * 256 + edges[:, 1]
+    assert np.unique(flat).size == flat.size, "duplicate edges not rejected"
+
+
+def test_sampler_count_near_expected():
+    params = kpgm.make_params(THETA, 9)
+    m = kpgm.expected_edges(params.thetas)
+    counts = [
+        kpgm.kpgm_sample(jax.random.PRNGKey(i), params).shape[0]
+        for i in range(5)
+    ]
+    assert abs(np.mean(counts) - m) < 5 * np.sqrt(m)
+
+
+def test_quadrant_marginals():
+    """Each sampled edge's quadrant at level 1 follows theta proportions.
+
+    d is large enough that duplicate-rejection (which legitimately shifts
+    mass away from dense quadrants) is negligible: 4000 edges over 2^20
+    cells collide with probability < 1%."""
+    params = kpgm.make_params(THETA, 10)
+    n = params.num_nodes
+    edges = kpgm.kpgm_sample(jax.random.PRNGKey(3), params, num_edges=4000)
+    a = (edges[:, 0] >= n // 2).astype(int)
+    b = (edges[:, 1] >= n // 2).astype(int)
+    counts = np.bincount(2 * a + b, minlength=4).astype(float)
+    frac = counts / counts.sum()
+    expect = THETA.reshape(-1) / THETA.sum()
+    np.testing.assert_allclose(frac, expect, atol=0.03)
+
+
+def test_d_over_31_rejected():
+    with pytest.raises(ValueError):
+        kpgm.sample_edge_batch(
+            jax.random.PRNGKey(0), jnp.ones((32, 2, 2)) * 0.5, 64
+        )

@@ -1,0 +1,56 @@
+"""Theorem-2 partition: rank computation, validity, minimality (property)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+
+
+@given(
+    st.lists(st.integers(min_value=0, max_value=7), min_size=1, max_size=64)
+)
+@settings(max_examples=200, deadline=None)
+def test_ranks_property(lam_list):
+    lam = np.asarray(lam_list, dtype=np.int64)
+    ranks = partition.occurrence_ranks_np(lam)
+    # brute-force |Z_i| definition from the paper
+    for i in range(lam.size):
+        zi = sum(1 for j in range(i + 1) if lam[j] == lam[i])
+        assert ranks[i] == zi
+
+
+@given(
+    st.lists(st.integers(min_value=0, max_value=5), min_size=1, max_size=48)
+)
+@settings(max_examples=100, deadline=None)
+def test_partition_valid_and_minimal(lam_list):
+    """Theorem 2: the D_c partition is valid (injective per set, covers all)
+    and uses exactly the pigeon-hole-minimal number of sets."""
+    lam = np.asarray(lam_list, dtype=np.int64)
+    part = partition.build_partition(lam)
+    assert partition.is_valid_partition(lam, part.sets)
+    assert part.B == partition.min_partition_size(lam)
+
+
+def test_jax_ranks_match_numpy():
+    rng = np.random.default_rng(0)
+    lam = rng.integers(0, 50, size=512)
+    r_np = partition.occurrence_ranks_np(lam)
+    r_jx = np.asarray(partition.occurrence_ranks(jnp.asarray(lam)))
+    np.testing.assert_array_equal(r_np, r_jx)
+
+
+def test_lookup_nodes():
+    lam = np.array([5, 3, 5, 9, 3])
+    part = partition.build_partition(lam)
+    # D_1 holds first occurrences: nodes 0 (cfg 5), 1 (cfg 3), 3 (cfg 9)
+    got = partition.lookup_nodes(
+        part.sorted_configs[0], part.sorted_nodes[0], np.array([3, 5, 9, 7])
+    )
+    np.testing.assert_array_equal(got, [1, 0, 3, -1])
+    # D_2 holds second occurrences: nodes 2 (cfg 5), 4 (cfg 3)
+    got2 = partition.lookup_nodes(
+        part.sorted_configs[1], part.sorted_nodes[1], np.array([3, 5])
+    )
+    np.testing.assert_array_equal(got2, [4, 2])

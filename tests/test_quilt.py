@@ -1,0 +1,103 @@
+"""Quilting correctness (paper Theorem 3): the sampled adjacency matrix has
+independent Bernoulli entries with P(A_ij = 1) = Q_ij.
+
+Validated by Monte-Carlo: empirical edge frequencies over repeated samples
+must match the exact Q computed via the bilinear form, and the quilted
+sampler must agree with the O(n^2) naive sampler in distribution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import magm, quilt, naive
+
+THETA = np.array([[0.15, 0.7], [0.7, 0.85]], dtype=np.float32)
+
+
+def _freq(sampler, n, trials, key0=0):
+    acc = np.zeros((n, n))
+    for t in range(trials):
+        e = sampler(jax.random.PRNGKey(key0 + t))
+        acc[e[:, 0], e[:, 1]] += 1
+    return acc / trials
+
+
+@pytest.mark.parametrize("mu", [0.5, 0.7])
+def test_quilt_matches_exact_probabilities(mu):
+    d, n, trials = 4, 24, 300
+    params = magm.make_params(THETA, mu, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(42), n, params.mu))
+    Q = np.asarray(magm.edge_prob_matrix(jnp.asarray(F), params.thetas))
+    freq = _freq(lambda k: quilt.quilt_sample(k, params, F), n, trials)
+    # per-cell binomial tolerance (5 sigma + slack for the X~Normal approx)
+    err = np.abs(freq - Q)
+    tol = 5 * np.sqrt(Q * (1 - Q) / trials) + 0.05
+    assert (err <= tol).mean() > 0.98, f"max err {err.max():.3f}"
+    # aggregate edge count matches expectation closely
+    assert abs(freq.sum() - Q.sum()) < 0.15 * Q.sum() + 1.0
+
+
+def test_fast_sampler_matches_exact_probabilities():
+    d, n, trials = 4, 32, 300
+    params = magm.make_params(THETA, 0.8, d)  # heavy-config regime
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(7), n, params.mu))
+    Q = np.asarray(magm.edge_prob_matrix(jnp.asarray(F), params.thetas))
+    freq = _freq(
+        lambda k: quilt.quilt_sample_fast(k, params, F, seed=int(k[1])),
+        n,
+        trials,
+    )
+    err = np.abs(freq - Q)
+    tol = 5 * np.sqrt(Q * (1 - Q) / trials) + 0.05
+    assert (err <= tol).mean() > 0.98, f"max err {err.max():.3f}"
+
+
+def test_quilt_and_naive_agree_on_edge_counts():
+    d, n = 5, 32
+    params = magm.make_params(THETA, 0.5, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(1), n, params.mu))
+    eq = [
+        quilt.quilt_sample(jax.random.PRNGKey(i), params, F).shape[0]
+        for i in range(20)
+    ]
+    en = [
+        naive.naive_sample(jax.random.PRNGKey(100 + i), params, F, tile=32).shape[0]
+        for i in range(20)
+    ]
+    # same mean edge count within noise
+    se = np.sqrt(np.var(eq) / 20 + np.var(en) / 20) + 1e-9
+    assert abs(np.mean(eq) - np.mean(en)) < 4 * se + 3
+
+
+def test_er_block_distribution():
+    rng = np.random.default_rng(0)
+    counts = [quilt._er_block(rng, 20, 30, 0.1).shape[0] for _ in range(200)]
+    mean = np.mean(counts)
+    assert abs(mean - 60.0) < 4 * np.sqrt(60 * 0.9 / 200) + 1
+    blk = quilt._er_block(rng, 20, 30, 0.5)
+    flat = blk[:, 0] * 30 + blk[:, 1]
+    assert np.unique(flat).size == flat.size  # without replacement
+    assert blk[:, 0].max() < 20 and blk[:, 1].max() < 30
+
+
+def test_bprime_cost_model():
+    counts = np.array([1] * 50 + [500])  # one heavy configuration
+    bp, cost = quilt.choose_bprime(counts, n=550, d=10, expected_e=1000.0)
+    assert bp < 500  # the heavy config must be pulled out of the quilt
+    assert cost < float("inf")
+
+
+def test_stats_reporting():
+    d, n = 4, 40
+    params = magm.make_params(THETA, 0.9, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(3), n, params.mu))
+    edges, st = quilt.quilt_sample_fast(
+        jax.random.PRNGKey(4), params, F, return_stats=True
+    )
+    assert st.heavy_groups >= 1  # mu=0.9 concentrates configurations
+    assert st.kept_edges == edges.shape[0]
+    assert st.light_nodes + sum(
+        1 for _ in range(0)
+    ) <= n

@@ -1,0 +1,104 @@
+"""Sharding rules + collectives (mesh-free parts run on 1 device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.dist import collectives, sharding
+from repro.models import transformer
+
+
+def _fake_mesh(shape, names):
+    """AbstractMesh-backed stand-in for spec computation (no devices)."""
+    return jax.sharding.AbstractMesh(shape, names)
+
+
+def test_param_specs_cover_all_leaves():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        params = transformer.abstract_params(cfg)
+        specs = sharding.param_specs(cfg, params, mesh)
+        leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        params_leaves = jax.tree.leaves(params)
+        assert len(leaves) == len(params_leaves)
+        for spec, leaf in zip(leaves, params_leaves):
+            assert isinstance(spec, P)
+            # every sharded dim divides the axis size
+            for dim, axes in zip(leaf.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                axes = (axes,) if isinstance(axes, str) else axes
+                total = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % total == 0, (arch, leaf.shape, spec)
+
+
+def test_big_weights_are_sharded():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = configs.get("deepseek_67b")
+    params = transformer.abstract_params(cfg)
+    specs = sharding.param_specs(cfg, params, mesh)
+    embed_spec = specs["embed"]
+    assert tuple(embed_spec) [0] == "model" and tuple(embed_spec)[1] == "data"
+    w1_spec = tuple(specs["blocks"]["mlp"]["w1"])
+    assert w1_spec[1] == "data" and w1_spec[2] == "model"
+
+
+def test_inference_drops_fsdp_for_small_models():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = configs.get("yi_9b")
+    params = transformer.abstract_params(cfg)
+    train_specs = sharding.param_specs(cfg, params, mesh)
+    inf_specs = sharding.param_specs(cfg, params, mesh, inference=True)
+    assert tuple(train_specs["blocks"]["mlp"]["w1"])[1] == "data"
+    assert tuple(inf_specs["blocks"]["mlp"]["w1"])[1] is None
+    # mixtral (140B) keeps FSDP even for inference
+    cfg_mx = configs.get("mixtral_8x22b")
+    assert not sharding.inference_drop_fsdp(cfg_mx, mesh)
+
+
+def test_moe_expert_sharding_modes():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg_ep = configs.get("phi3_5_moe_42b")
+    specs = sharding.param_specs(
+        cfg_ep, transformer.abstract_params(cfg_ep), mesh
+    )
+    assert tuple(specs["blocks"]["moe"]["w1"])[1] == "model"  # expert axis
+    cfg_tp = configs.get("mixtral_8x22b")
+    specs_tp = sharding.param_specs(
+        cfg_tp, transformer.abstract_params(cfg_tp), mesh
+    )
+    assert tuple(specs_tp["blocks"]["moe"]["w1"])[1] is None
+    assert tuple(specs_tp["blocks"]["moe"]["w1"])[3] == "model"  # d_ff
+
+
+def test_stochastic_round_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,)) * 3.0
+    acc = jnp.zeros_like(x)
+    trials = 200
+    for i in range(trials):
+        q, scale = collectives._stochastic_round_int8(x, jax.random.fold_in(key, i))
+        acc = acc + q.astype(jnp.float32) * scale
+    mean = acc / trials
+    err = float(jnp.abs(mean - x).max())
+    assert err < 0.15, err  # unbiased up to MC noise
+
+
+def test_compressed_psum_single_axis():
+    mesh = Mesh(np.array(jax.devices()).reshape(1), ("pod",))
+    grads = {"w": jnp.ones((8, 8)) * 0.5}
+    out = collectives.compressed_grad_allreduce(
+        grads, jax.random.PRNGKey(0), mesh, axis="pod"
+    )
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.5, atol=0.02)
+
+
+def test_hints_noop_without_mesh():
+    from repro.dist.hints import shard
+
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", "tp")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

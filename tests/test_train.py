@@ -1,0 +1,79 @@
+"""Training substrate: cross-entropy, optimizer, loss-decreases integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.model import build
+from repro.train import optimizer as opt_lib
+from repro.train import steps
+
+
+def test_cross_entropy_matches_naive():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 5, 11))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, 11)
+    nll, acc = steps.cross_entropy(logits, labels)
+    # naive gather-based reference
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.mean(
+        jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    )
+    np.testing.assert_allclose(float(nll), float(want), rtol=1e-5)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_adamw_reduces_quadratic():
+    cfg = opt_lib.OptConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt_lib.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * state.master["w"]}  # d/dw ||w||^2
+        params, state, metrics = opt_lib.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert metrics["grad_norm"] > 0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr_5 = float(opt_lib.schedule(cfg, jnp.int32(5)))
+    lr_10 = float(opt_lib.schedule(cfg, jnp.int32(10)))
+    lr_90 = float(opt_lib.schedule(cfg, jnp.int32(90)))
+    assert lr_5 < lr_10
+    assert lr_90 < lr_10
+    assert lr_90 >= 0.1 * 1.0 - 1e-6  # floor
+
+
+def test_train_step_reduces_loss():
+    cfg = configs.get_smoke("olmo_1b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt_lib.init(params)
+    step = jax.jit(
+        steps.make_train_step(
+            model, opt_lib.OptConfig(lr=3e-3, warmup_steps=2, total_steps=40)
+        )
+    )
+    # overfit one tiny batch
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    losses = []
+    for _ in range(15):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert np.isfinite(losses).all()
+
+
+def test_moe_train_step_finite():
+    cfg = configs.get_smoke("phi3_5_moe_42b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt_lib.init(params)
+    step = jax.jit(steps.make_train_step(model))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    params, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["aux"]) > 0  # router aux-loss is live
