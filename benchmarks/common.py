@@ -21,6 +21,14 @@ def time_call(fn: Callable, *, repeats: int = 3) -> float:
     return float(np.median(times))
 
 
+# every emit() lands here too, so run.py --json can persist the sweep as a
+# machine-readable trajectory point (BENCH_<tag>.json) next to the CSV stream
+ROWS: list = []
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """CSV row: name, us_per_call, derived."""
+    ROWS.append(
+        {"name": name, "us_per_call": seconds * 1e6, "derived": derived}
+    )
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,21 +1,32 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json BENCH_<tag>.json]
 
-Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and,
+with ``--json OUT``, writes the same rows as a JSON trajectory point so the
+perf history accumulates across PRs (CI runs ``--fast --json``).
 Figure map: bench_partition (Figs 5-7), bench_properties (Figs 8-9),
 bench_scalability (Figs 10-11), bench_mu (Figs 12-13), bench_d (Fig 14),
 bench_kernels (Pallas kernel rooflines).
 """
 
 import argparse
+import json
+import platform
 import sys
+import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller sweeps")
     ap.add_argument("--only", default=None, help="run a single bench module")
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="OUT",
+        help="also write the CSV rows as a JSON trajectory file",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -25,6 +36,7 @@ def main() -> None:
         bench_partition,
         bench_properties,
         bench_scalability,
+        common,
     )
 
     print("name,us_per_call,derived")
@@ -36,11 +48,34 @@ def main() -> None:
         "d": lambda: bench_d.run(log_n=10 if args.fast else 12),
         "kernels": bench_kernels.run,
     }
+    t0 = time.time()
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         print(f"# --- {name} ---", file=sys.stderr, flush=True)
         fn()
+
+    if args.json:
+        import jax
+
+        record = {
+            "schema": "qkg-bench-v1",
+            "fast": args.fast,
+            "only": args.only,
+            "unix_time": t0,
+            "wall_s": time.time() - t0,
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print(
+            f"# wrote {len(common.ROWS)} rows to {args.json}",
+            file=sys.stderr,
+            flush=True,
+        )
 
 
 if __name__ == "__main__":

@@ -47,6 +47,18 @@ _SKIP_BYTES = {
 }
 
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() normalised to a flat dict.
+
+    jax <= 0.4.x returns a one-element list of dicts, newer jax the dict
+    itself; either way an absent analysis becomes {}.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def shape_bytes(shape_str: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_RE.findall(shape_str):

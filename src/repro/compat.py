@@ -1,0 +1,10 @@
+"""Version shims for jax APIs that have moved between homes."""
+
+from __future__ import annotations
+
+import jax
+
+# jax.shard_map graduated from jax.experimental in 0.5; support both homes
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401

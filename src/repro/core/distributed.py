@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core import kpgm
 
 
@@ -47,7 +48,7 @@ def sample_edges_sharded(
     flat_mesh = Mesh(
         np.asarray(mesh.devices).reshape(-1), axis_names=("dev",)
     )
-    body = jax.shard_map(
+    body = _shard_map(
         functools.partial(_device_sample, per_device=per_device),
         mesh=flat_mesh,
         in_specs=(P(), P()),

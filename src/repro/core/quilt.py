@@ -271,26 +271,70 @@ def quilt_sample_fast(
     return out
 
 
+_RESAMPLE_ROUNDS = 32
+_DENSE_CHUNK_CELLS = 1 << 22  # cap the (rows, G) key matrix at ~32 MB
+
+
 def _sample_cols(
     rng: np.random.Generator, counts: np.ndarray, group: np.ndarray
 ) -> np.ndarray:
     """For each row i, draw counts[i] distinct members of ``group``.
 
-    Per-row sampling without replacement; vectorised by drawing with
-    replacement then fixing the (rare) collisions row by row.
+    Fully vectorised (no per-row Python loop):
+
+    - DENSE rows (counts[i] > |group| / 2) take the first counts[i] entries
+      of a random-key argsort — an exact uniform draw without replacement,
+      batched over all dense rows at once (chunked to bound memory).
+    - SPARSE rows draw with replacement, then only the colliding slots are
+      redrawn, globally across all rows per round (duplicates are found with
+      one sort over row-tagged keys).  Collisions are rare at counts well
+      below |group|, so this converges in O(1) rounds; any row still
+      colliding after ``_RESAMPLE_ROUNDS`` falls back to an exact
+      ``rng.choice(..., replace=False)``.
     """
-    tot = int(counts.sum())
-    cols = rng.integers(0, group.size, size=tot)
-    # fix collisions within each row segment
-    seg_ends = np.cumsum(counts[counts > 0])
-    seg_starts = np.concatenate([[0], seg_ends[:-1]])
-    for s, e in zip(seg_starts, seg_ends):
-        seg = cols[s:e]
-        u = np.unique(seg)
-        while u.size < seg.size:
-            extra = rng.integers(0, group.size, size=seg.size - u.size)
-            u = np.unique(np.concatenate([u, extra]))
-        cols[s:e] = u[: seg.size]
+    counts = np.asarray(counts)
+    g = int(group.size)
+    pos = np.minimum(counts[counts > 0], g)  # clip BEFORE sizing the output
+    tot = int(pos.sum())
+    if tot == 0:
+        return group[:0].astype(group.dtype)
+    seg_id = np.repeat(np.arange(pos.size, dtype=np.int64), pos)
+    cols = np.empty(tot, dtype=np.int64)
+
+    dense_seg = pos > g // 2
+    dense_slot = dense_seg[seg_id]
+    if dense_seg.any():
+        lens = pos[dense_seg]
+        picks = []
+        rows_per_chunk = max(1, _DENSE_CHUNK_CELLS // g)
+        for lo in range(0, lens.size, rows_per_chunk):
+            chunk = lens[lo : lo + rows_per_chunk]
+            order = np.argsort(rng.random((chunk.size, g)), axis=1)
+            mask = np.arange(g)[None, :] < chunk[:, None]
+            picks.append(order[mask])  # row-major: chunk rows stay in order
+        cols[dense_slot] = np.concatenate(picks)
+
+    sparse_slot = ~dense_slot
+    ns = int(sparse_slot.sum())
+    if ns:
+        sid = seg_id[sparse_slot]
+        sub = rng.integers(0, g, size=ns)
+        dup = np.zeros(ns, dtype=bool)
+        for _ in range(_RESAMPLE_ROUNDS):
+            key = sid * g + sub
+            order = np.argsort(key, kind="stable")
+            sk = key[order]
+            dup[:] = False
+            dup[order[1:]] = sk[1:] == sk[:-1]
+            n_dup = int(dup.sum())
+            if not n_dup:
+                break
+            sub[dup] = rng.integers(0, g, size=n_dup)
+        else:  # pathological rows: exact fallback, loops only over offenders
+            for s in np.unique(sid[dup]):
+                m = sid == s
+                sub[m] = rng.choice(g, size=int(m.sum()), replace=False)
+        cols[sparse_slot] = sub
     return group[cols]
 
 

@@ -1,0 +1,22 @@
+"""Distributed substrate: sharding rules, logical-axis hints, compressed
+collectives, checkpointing and fault-tolerant supervision.
+
+Layering (bottom up):
+
+- ``hints``       — logical axis names ("batch", "tp") resolved against the
+                    ambient mesh; no-ops on a mesh-less single device so the
+                    model code carries its sharding intent everywhere.
+- ``sharding``    — PartitionSpec trees for params / inputs of every arch,
+                    with divisibility guards so the same rules serve the
+                    16x16 production pod, the 2x16x16 multi-pod mesh and the
+                    1-device host mesh.
+- ``collectives`` — int8 stochastic-rounding gradient compression for the
+                    slow inter-pod links.
+- ``checkpoint``  — atomic step_N checkpoints with shape-checked restore and
+                    elastic (resharding) restore.
+- ``fault``       — crash-restart training supervision + straggler detection.
+"""
+
+from repro.dist import checkpoint, collectives, fault, hints, sharding
+
+__all__ = ["checkpoint", "collectives", "fault", "hints", "sharding"]

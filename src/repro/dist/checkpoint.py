@@ -1,0 +1,197 @@
+"""Step checkpoints: atomic save, shape-checked restore, pruning.
+
+Layout: ``<dir>/step_<N>/`` holding one raw-bytes file per pytree leaf plus
+``meta.json`` (shapes, dtypes, leaf count).  Writes land in a ``.tmp``
+sibling and are renamed into place, so a crash mid-save never leaves a
+directory that ``latest_step`` would offer for restore (the crash-restart
+supervisor depends on this).
+
+Restore takes a TARGET tree (concrete arrays or ``jax.eval_shape`` structs)
+that fixes both the pytree structure and the expected leaf shapes; any
+mismatch raises ValueError instead of silently loading garbage into a
+resized model.  Elastic restore passes ``shardings=`` to place each leaf
+straight onto the (possibly different) mesh of the restarted job.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_PREFIX = "step_"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"{_PREFIX}{step}")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))  # bfloat16, float8_*, ...
+
+
+def _complete(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "meta.json"))
+
+
+def _recover(directory: str) -> None:
+    """Finish a save interrupted between its two renames.
+
+    A crash after ``final -> final.old`` but before ``tmp -> final`` leaves
+    the step only under ``.old`` (and usually a complete ``.tmp``); promote
+    whichever complete copy exists back to ``final`` so latest_step never
+    loses a restorable checkpoint, then drop the leftovers.
+    """
+    for name in os.listdir(directory):
+        if not (name.startswith(_PREFIX) and name.endswith(".old")):
+            continue
+        final = os.path.join(directory, name[:-len(".old")])
+        tmp, old = final + ".tmp", final + ".old"
+        if not _complete(final):
+            if _complete(tmp):
+                os.rename(tmp, final)
+            elif _complete(old):
+                os.rename(old, final)
+        for leftover in (tmp, old):
+            if os.path.exists(leftover):
+                shutil.rmtree(leftover, ignore_errors=True)
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Atomically write ``tree`` as checkpoint ``step``; returns its path."""
+    leaves, _ = jax.tree.flatten(tree)
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    meta: Dict[str, Any] = {"step": int(step), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        meta["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+        with open(os.path.join(tmp, f"{i:05d}.bin"), "wb") as f:
+            f.write(arr.tobytes())
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    # never a window without a complete checkpoint at this step: move the
+    # old dir ASIDE (not rmtree) so a crash between renames still leaves
+    # either the old or the new copy restorable
+    aside = final + ".old"
+    if os.path.exists(aside):
+        shutil.rmtree(aside)
+    if os.path.exists(final):
+        os.rename(final, aside)
+    os.rename(tmp, final)
+    if os.path.exists(aside):
+        shutil.rmtree(aside)
+    return final
+
+
+def restore(
+    directory: str,
+    step: int,
+    target: Any,
+    *,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Load checkpoint ``step`` into the structure of ``target``.
+
+    Returns (tree, meta).  Raises ValueError when the stored leaves do not
+    match the target's count, shapes or dtypes.  ``shardings`` (a matching
+    tree of Sharding objects; None entries mean default placement) places
+    each leaf on restore — the elastic path for restarting on a different
+    mesh.
+    """
+    path = _step_dir(directory, step)
+    if not _complete(path):
+        _recover(directory)  # the step may sit under .old/.tmp post-crash
+    if not _complete(path):
+        raise ValueError(
+            f"no checkpoint at step {step} in {directory}; "
+            f"available: {available_steps(directory)}"
+        )
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    t_leaves, treedef = jax.tree.flatten(target)
+    if len(meta["leaves"]) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint {path} has {len(meta['leaves'])} leaves, "
+            f"target has {len(t_leaves)}"
+        )
+    s_leaves = None
+    if shardings is not None:
+        # None entries mean "default placement"; treat them as leaves so the
+        # flattening stays aligned with the target's leaves
+        s_leaves, s_treedef = jax.tree.flatten(
+            shardings,
+            is_leaf=lambda x: x is None or isinstance(x, jax.sharding.Sharding),
+        )
+        if s_treedef != treedef:
+            raise ValueError(
+                f"shardings tree structure {s_treedef} does not match "
+                f"target structure {treedef}"
+            )
+
+    out = []
+    for i, (entry, t_leaf) in enumerate(zip(meta["leaves"], t_leaves)):
+        shape = tuple(entry["shape"])
+        if shape != tuple(np.shape(t_leaf)):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {shape} != target shape "
+                f"{tuple(np.shape(t_leaf))}"
+            )
+        dtype = _np_dtype(entry["dtype"])
+        t_dtype = getattr(t_leaf, "dtype", None)
+        if t_dtype is not None and np.dtype(t_dtype) != dtype:
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {dtype} != target dtype "
+                f"{np.dtype(t_dtype)}"
+            )
+        with open(os.path.join(path, f"{i:05d}.bin"), "rb") as f:
+            arr = np.frombuffer(f.read(), dtype=dtype).reshape(shape)
+        if s_leaves is not None and s_leaves[i] is not None:
+            out.append(jax.device_put(arr, s_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), meta
+
+
+def available_steps(directory: str) -> list[int]:
+    """Sorted step numbers of complete checkpoints under ``directory``."""
+    if not os.path.isdir(directory):
+        return []
+    _recover(directory)
+    steps = []
+    for name in os.listdir(directory):
+        if not name.startswith(_PREFIX) or name.endswith((".tmp", ".old")):
+            continue
+        if not _complete(os.path.join(directory, name)):
+            continue
+        try:
+            steps.append(int(name[len(_PREFIX):]))
+        except ValueError:
+            continue
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest complete checkpoint step, or None."""
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def prune(directory: str, *, keep: int) -> None:
+    """Delete all but the newest ``keep`` checkpoints."""
+    for step in available_steps(directory)[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(directory, step))

@@ -1,0 +1,136 @@
+"""Logical sharding hints resolved against the ambient mesh.
+
+Model code annotates activations with LOGICAL axis names ("batch", "tp")
+instead of mesh axis names, so the same forward pass runs unannotated on a
+bare CPU device, batch-sharded on the host mesh, and fully partitioned on the
+16x16 / 2x16x16 production meshes.  Resolution rules:
+
+- "batch" -> every data-parallel mesh axis present, major-to-minor
+             (("pod", "data") on the multi-pod mesh, ("data",) otherwise)
+- "tp"    -> the tensor-parallel axis ("model",) when present
+- None    -> unconstrained
+
+A hint is dropped (dim left unconstrained) whenever the dim does not divide
+the resolved axis-size product — the partitioner would otherwise reject the
+constraint outright — so shape oddities (qwen3's 40 heads on 16-way TP,
+whisper's 51865-token vocab) degrade to replication instead of erroring.
+"""
+
+from __future__ import annotations
+
+import math
+import warnings
+from typing import Optional, Tuple
+
+import jax
+
+# logical name -> candidate mesh axes, major first (greedily truncated from
+# the left until the dim divides the remaining axis-size product)
+_LOGICAL_AXES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+
+def _find_thread_resources():
+    """Locate jax's mesh-context thread state (private; has moved before).
+
+    Resolved ONCE at import and warned about loudly when absent, so a jax
+    upgrade that relocates it cannot silently turn every sharding hint into
+    a no-op mid-training.
+    """
+    try:
+        from jax._src import mesh as mesh_lib
+
+        return mesh_lib.thread_resources
+    except (ImportError, AttributeError):
+        pass
+    try:  # older home
+        from jax.interpreters import pxla
+
+        return pxla.thread_resources
+    except (ImportError, AttributeError):
+        return None
+
+
+_THREAD_RESOURCES = _find_thread_resources()
+if _THREAD_RESOURCES is None:  # pragma: no cover - future jax versions
+    warnings.warn(
+        "repro.dist.hints: jax mesh thread resources not found at any known "
+        "location; sharding hints are DISABLED (activations will not be "
+        "partitioned). Update _find_thread_resources for this jax version.",
+        RuntimeWarning,
+        stacklevel=2,
+    )
+
+
+def current_mesh():
+    """The mesh installed by ``with mesh:`` or None outside any mesh scope."""
+    if _THREAD_RESOURCES is None:
+        return None
+    mesh = _THREAD_RESOURCES.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def resolve_axes(name: Optional[str], dim: int, mesh) -> Optional[Tuple[str, ...]]:
+    """Mesh axes for one logical name on one dim, or None if unshardable."""
+    if name is None:
+        return None
+    axes = tuple(
+        a for a in _LOGICAL_AXES.get(name, ()) if a in mesh.axis_names
+    )
+    # drop major axes until the product divides the dim
+    while axes:
+        total = math.prod(mesh.shape[a] for a in axes)
+        if total > 1 and dim % total == 0:
+            return axes
+        axes = axes[1:]
+    return None
+
+
+def build_spec(
+    names, shape, mesh, *, pad_left: bool = False, drop: Tuple[str, ...] = ()
+) -> jax.sharding.PartitionSpec:
+    """PartitionSpec from per-dim logical names.
+
+    Missing names pad with None — on the right for activations (trailing
+    dims unconstrained), on the left for stacked params (leading vmap dims
+    unconstrained).  Names in ``drop`` resolve to None (inference FSDP
+    drop).  The single home for name->axes entry shaping, shared by
+    ``shard`` and sharding.param_specs.
+    """
+    names = tuple(names)
+    pad = (None,) * (len(shape) - len(names))
+    names = pad + names if pad_left else names + pad
+    entries = []
+    for dim, name in zip(shape, names):
+        axes = resolve_axes(None if name in drop else name, dim, mesh)
+        if axes is None:
+            entries.append(None)
+        elif len(axes) == 1:
+            entries.append(axes[0])
+        else:
+            entries.append(axes)
+    return jax.sharding.PartitionSpec(*entries)
+
+
+def logical_spec(names, shape, mesh) -> jax.sharding.PartitionSpec:
+    """PartitionSpec from per-dim logical names (right-padded with None)."""
+    return build_spec(names, shape, mesh)
+
+
+def shard(x: jax.Array, *names) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names; no-op without a mesh.
+
+    ``names`` give one logical name per leading dim ("batch", "tp", or None);
+    trailing dims are unconstrained.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(names, x.shape, mesh)
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, sharding)

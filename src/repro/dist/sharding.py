@@ -1,0 +1,168 @@
+"""Partitioning rules: PartitionSpec trees for params and inputs.
+
+One rule table covers all six families.  Dims carry LOGICAL roles
+("fsdp" over the data axis, "tp" over the model axis); resolution against
+the target mesh drops any role whose axis is absent or whose size does not
+divide the dim, so the same rules serve the 16x16 pod, the 2x16x16
+multi-pod mesh and the 1-device host mesh without special cases.
+
+Weight layout follows the Megatron convention: column-parallel in
+(wq/wk/wv/w1/w3), row-parallel out (wo/w2/out_proj), embedding sharded
+vocab-over-model (the logits matmul contracts d_model, so the vocab axis of
+the output inherits the TP sharding cross_entropy expects).  The remaining
+dim of every 2D weight is FSDP-sharded over "data".
+
+Inference drops the FSDP factor for models whose TP-sharded bf16 weights fit
+comfortably per chip (``inference_drop_fsdp``): serving wants weights
+resident, not an all-gather per layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.hints import build_spec
+
+# bf16 weight budget per chip under pure TP; above this, serving keeps FSDP
+_INFERENCE_WEIGHT_BUDGET_BYTES = 4 << 30
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if key is None:
+            key = getattr(entry, "name", None)
+        if key is not None:
+            names.append(str(key))
+    return tuple(names)
+
+
+def _leaf_roles(names: Tuple[str, ...], cfg: ModelConfig) -> Tuple[Optional[str], ...]:
+    """Logical roles for the TRAILING dims of one param leaf.
+
+    Leading stack dims (vmapped layer axes) are padded with None by the
+    caller.  Returning () replicates (norm scales, biases, small vectors).
+    """
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+
+    if leaf == "embed":
+        return ("tp", "fsdp")  # (vocab, d_model)
+    if leaf == "enc_pos":
+        return (None, "fsdp")  # (Se, d_model)
+
+    # attention projections
+    if leaf in ("wq", "wk", "wv"):
+        return ("fsdp", "tp")  # (d, heads*hd)
+    if leaf == "wo":
+        return ("tp", "fsdp")  # (heads*hd, d)
+
+    # MoE expert stacks: (E, d, f) / (E, f, d)
+    if parent == "moe":
+        if leaf == "router":
+            return ()  # (d, E) f32, tiny: replicate
+        ep = cfg.expert_sharding == "ep"
+        if leaf in ("w1", "w3"):
+            return ("tp", "fsdp", None) if ep else (None, "fsdp", "tp")
+        if leaf == "w2":
+            return ("tp", None, "fsdp") if ep else (None, "tp", "fsdp")
+
+    # dense SwiGLU MLP: (d, f) / (f, d)
+    if leaf in ("w1", "w3"):
+        return ("fsdp", "tp")
+    if leaf == "w2":
+        return ("tp", "fsdp")
+
+    # SSM mixers: d_inner is the TP axis (projections kept as separate
+    # leaves exactly so this never slices across component boundaries)
+    if leaf in ("in_x", "in_z", "w_z", "w_x"):
+        return ("fsdp", "tp")  # (d, di)
+    if leaf in ("w_B", "w_C", "w_dt"):
+        return ("fsdp", None)  # (d, ns|nh): state/head dims too small to cut
+    if leaf in ("xp_dt", "xp_B", "xp_C"):
+        return ("tp", None)  # (di, r|ns)
+    if leaf == "dt_proj":
+        return (None, "tp")  # (r, di)
+    if leaf == "out_proj":
+        return ("tp", "fsdp")  # (di, d)
+    if leaf in ("conv_w", "conv_x"):
+        return (None, "tp")  # (K, di) depthwise
+    if leaf == "A_log" and cfg.ssm_version == 1:
+        return ("tp", None)  # mamba1: (di, ns); mamba2's (nh,) replicates
+
+    # norm scales, q/k norms, conv biases, dt_bias, D, gate scalars, ...
+    return ()
+
+
+def _resolve(
+    roles: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh,
+    *,
+    drop_fsdp: bool = False,
+) -> P:
+    """Logical roles -> PartitionSpec, guarded by presence + divisibility."""
+    if len(roles) > len(shape):  # defensive: replicate odd-rank leaves
+        roles = ()
+    return build_spec(
+        roles, shape, mesh, pad_left=True, drop=("fsdp",) if drop_fsdp else ()
+    )
+
+
+def inference_drop_fsdp(cfg: ModelConfig, mesh) -> bool:
+    """True when pure-TP bf16 weights fit the per-chip serving budget."""
+    tp = mesh.shape.get("model", 1)
+    per_chip_bytes = cfg.param_count() * 2 / max(tp, 1)
+    return per_chip_bytes <= _INFERENCE_WEIGHT_BUDGET_BYTES
+
+
+def param_specs(
+    cfg: ModelConfig, params: Any, mesh, *, inference: bool = False
+) -> Any:
+    """PartitionSpec tree mirroring ``params`` (leaves are PartitionSpec)."""
+    drop = inference and inference_drop_fsdp(cfg, mesh)
+
+    def spec(path, leaf):
+        return _resolve(
+            _leaf_roles(_path_names(path), cfg), leaf.shape, mesh, drop_fsdp=drop
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(
+    cfg: ModelConfig, params: Any, mesh, *, inference: bool = False
+) -> Any:
+    """NamedSharding tree for jit in_shardings / device_put."""
+    specs = param_specs(cfg, params, mesh, inference=inference)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, inputs: Any, mesh) -> Any:
+    """PartitionSpec tree for one cell's inputs (tokens/labels/cache/...).
+
+    Batch dims shard over every data-parallel axis present (("pod", "data")
+    on the multi-pod mesh); everything else is unconstrained — internal
+    activation sharding is steered by hints.shard inside the model.
+    """
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        leaf_name = names[-1] if names else ""
+        if not leaf.shape:  # cache_len and friends
+            return P()
+        # cache stacks are (L, B, ...); enc_out and top-level inputs (B, ...)
+        batch_dim = 1 if ("cache" in names and leaf_name != "enc_out") else 0
+        roles = [None] * len(leaf.shape)
+        roles[batch_dim] = "batch"
+        return _resolve(tuple(roles), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, inputs)

@@ -125,7 +125,7 @@ def lower_cell(
             if hasattr(mem, attr):
                 mem_bytes = float(getattr(mem, attr))
                 break
-    xla_cost = compiled.cost_analysis() or {}
+    xla_cost = hlo_cost.xla_cost(compiled)
     hlo = compiled.as_text()
     # loop-aware cost model (analysis/hlo_cost.py): XLA's own cost_analysis
     # counts scan bodies once, under-reporting layer stacks by ~num_layers.

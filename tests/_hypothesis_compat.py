@@ -1,0 +1,83 @@
+"""Degrade hypothesis property tests to fixed-example sweeps when hypothesis
+is not installed, so collection never hard-fails in a minimal container.
+
+Usage in test modules (replaces ``from hypothesis import ...``):
+
+    from _hypothesis_compat import given, settings, st
+
+With hypothesis installed this re-exports the real library unchanged.
+Without it, ``@given`` draws a deterministic example sweep (seeded per
+example index) from stub strategies that mirror the small subset of the
+strategies API the suite uses: ``integers``, ``sampled_from``, ``lists``.
+"""
+
+from __future__ import annotations
+
+import types
+
+try:  # real hypothesis when available
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1))
+        )
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    def _lists(elements, min_size=0, max_size=16):
+        return _Strategy(
+            lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.integers(min_size, max_size + 1))
+            ]
+        )
+
+    st = types.SimpleNamespace(
+        integers=_integers, sampled_from=_sampled_from, lists=_lists
+    )
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Record max_examples for the shim's @given loop; drop the rest."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            # zero-arg wrapper WITHOUT functools.wraps: pytest follows
+            # __wrapped__ when inspecting signatures and would treat the
+            # strategy parameters as fixtures
+            def wrapper():
+                for i in range(n):
+                    rng = np.random.default_rng(i)
+                    values = [s.draw(rng) for s in strategies]
+                    fn(*values)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -49,6 +49,24 @@ def test_restore_rejects_shape_mismatch(tmp_path):
         ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros((4, 4))})
 
 
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((3,), jnp.float32)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros((3,), jnp.int32)})
+
+
+def test_recover_save_interrupted_between_renames(tmp_path):
+    """Crash after final->old but before tmp->final must not lose the step."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    os.rename(tmp_path / "step_3", tmp_path / "step_3.old")
+    assert ckpt.latest_step(str(tmp_path)) == 3  # promoted back
+    restored, _ = ckpt.restore(str(tmp_path), 3, jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not (tmp_path / "step_3.old").exists()
+
+
 def test_supervisor_restarts_after_fault(tmp_path):
     """Inject a fault mid-run; training must restore and reach the target
     step with monotonically recoverable state."""

@@ -12,7 +12,11 @@ from repro.models import transformer
 
 def _fake_mesh(shape, names):
     """AbstractMesh-backed stand-in for spec computation (no devices)."""
-    return jax.sharding.AbstractMesh(shape, names)
+    try:
+        return jax.sharding.AbstractMesh(shape, names)  # jax >= 0.5
+    except TypeError:
+        # jax 0.4.x signature: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_param_specs_cover_all_leaves():
