@@ -11,14 +11,21 @@ THETA_1 = np.array([[0.15, 0.70], [0.70, 0.85]], dtype=np.float32)
 THETA_2 = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
 
 
-def time_call(fn: Callable, *, repeats: int = 3) -> float:
-    """Median wall-time of fn() in seconds."""
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
+def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Min-of-k wall-time of fn() in seconds, after ``warmup`` untimed calls.
+
+    Nanosecond clock + separate warmup + min-of-k: the PR-1 timer folded jit
+    compilation into the first rep and the median then quantised multi-second
+    rows; min over warmed reps is the standard low-noise point estimate.
+    """
+    for _ in range(max(warmup, 0)):
         fn()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter_ns()
+        fn()
+        best = min(best, time.perf_counter_ns() - t0)
+    return best / 1e9
 
 
 # every emit() lands here too, so run.py --json can persist the sweep as a

@@ -1,0 +1,107 @@
+"""Benchmark regression gate: compare a fresh BENCH json against the latest
+committed trajectory point and fail on big per-row regressions.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_ci.json \
+        [--baseline BENCH_pr1.json] [--threshold 2.5]
+
+Rows are matched by name; rows present in only one file are reported but
+never fail the gate (sweeps grow across PRs).  The default threshold is
+deliberately loose (2.5x) — CI machines are noisy and deterministic-value
+rows (partition sizes, edge counts) sit at ratio ~1.0, so anything above the
+threshold is a real regression, not jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        record = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in record["rows"]}
+
+
+def find_baseline(exclude: str) -> str | None:
+    """Latest committed BENCH_pr<N>.json by PR number (fallback: any
+    BENCH_*.json by in-file timestamp)."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cands = [
+        p
+        for p in glob.glob(os.path.join(here, "BENCH_*.json"))
+        if os.path.abspath(p) != os.path.abspath(exclude)
+    ]
+    if not cands:
+        return None
+
+    def rank(path: str):
+        m = re.search(r"BENCH_pr(\d+)\.json$", os.path.basename(path))
+        if m:
+            return (1, int(m.group(1)))
+        try:
+            with open(path) as f:
+                return (0, json.load(f).get("unix_time", 0.0))
+        except (OSError, json.JSONDecodeError):
+            return (0, 0.0)
+
+    return max(cands, key=rank)
+
+
+def compare(new_rows: dict, base_rows: dict, threshold: float):
+    regressions, improvements = [], []
+    for name, new_us in sorted(new_rows.items()):
+        old_us = base_rows.get(name)
+        if old_us is None or old_us <= 0 or new_us <= 0:
+            continue
+        ratio = new_us / old_us
+        if ratio > threshold:
+            regressions.append((name, old_us, new_us, ratio))
+        elif ratio < 1.0 / threshold:
+            improvements.append((name, old_us, new_us, ratio))
+    return regressions, improvements
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh benchmark json (e.g. BENCH_ci.json)")
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="committed trajectory point; default: latest BENCH_pr<N>.json",
+    )
+    ap.add_argument("--threshold", type=float, default=2.5)
+    args = ap.parse_args()
+
+    base_path = args.baseline or find_baseline(args.new)
+    if base_path is None:
+        print("compare: no committed BENCH_*.json baseline found; skipping")
+        return 0
+    new_rows = load_rows(args.new)
+    base_rows = load_rows(base_path)
+    regressions, improvements = compare(new_rows, base_rows, args.threshold)
+
+    common = sum(1 for n in new_rows if n in base_rows)
+    print(
+        f"compare: {args.new} vs {os.path.basename(base_path)} — "
+        f"{common} comparable rows, threshold {args.threshold}x"
+    )
+    for name, old, new, ratio in improvements:
+        print(f"  improved  {name}: {old:.1f} -> {new:.1f} us ({ratio:.2f}x)")
+    for name, old, new, ratio in regressions:
+        print(
+            f"  REGRESSED {name}: {old:.1f} -> {new:.1f} us ({ratio:.2f}x)"
+        )
+    if regressions:
+        print(f"compare: {len(regressions)} row(s) regressed > {args.threshold}x")
+        return 1
+    print("compare: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,18 @@
 """Core library: the paper's contribution (quilted MAGM sampling) in JAX."""
 
-from repro.core import distributed, kpgm, magm, naive, partition, quilt, stats
+from repro.core import (
+    dedup,
+    distributed,
+    kpgm,
+    magm,
+    naive,
+    partition,
+    quilt,
+    stats,
+)
 
 __all__ = [
+    "dedup",
     "distributed",
     "kpgm",
     "magm",

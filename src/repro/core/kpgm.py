@@ -24,6 +24,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dedup
+
+# Above this many candidates in one device batch the fixed-shape dedup
+# buffers stop paying for themselves on small hosts; fall back to the
+# round-by-round host path (kept for reference + large-d correctness).
+DEVICE_MAX_CANDIDATES = 1 << 25
+
 
 class KPGMParams(NamedTuple):
     """Per-level 2x2 initiator matrices, shape (d, 2, 2), float32 in [0,1]."""
@@ -96,6 +103,20 @@ def _level_cumprobs(thetas: jax.Array) -> jax.Array:
     return jnp.cumsum(flat, axis=1)
 
 
+def _descend(u: jax.Array, cum: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(N, d) uniforms + (d, 4) cumulative quadrant probs -> int32 id pairs."""
+    d = u.shape[1]
+    quad = (
+        (u >= cum[None, :, 0]).astype(jnp.int32)
+        + (u >= cum[None, :, 1]).astype(jnp.int32)
+        + (u >= cum[None, :, 2]).astype(jnp.int32)
+    )
+    a = quad >> 1  # source bit-plane, (N, d)
+    b = quad & 1  # target bit-plane
+    pows = (1 << jnp.arange(d - 1, -1, -1)).astype(jnp.int32)
+    return a @ pows, b @ pows
+
+
 @functools.partial(jax.jit, static_argnames=("num_edges",))
 def sample_edge_batch(
     key: jax.Array, thetas: jax.Array, num_edges: int
@@ -111,15 +132,8 @@ def sample_edge_batch(
     if d > 31:
         raise ValueError("node ids are int32 on device; require d <= 31")
     cum = _level_cumprobs(thetas)  # (d, 4)
-    u = jax.random.uniform(key, (num_edges, d))
-    # quadrant index in {0,1,2,3}: count thresholds strictly below u.
-    quad = jnp.sum(u[:, :, None] >= cum[None, :, :3], axis=-1).astype(jnp.int32)
-    a = quad >> 1  # source bit-plane, (num_edges, d)
-    b = quad & 1  # target bit-plane
-    pows = (1 << jnp.arange(d - 1, -1, -1)).astype(jnp.int32)
-    src = a @ pows
-    dst = b @ pows
-    return src, dst
+    u = jax.random.uniform(key, (num_edges, d), dtype=jnp.float32)
+    return _descend(u, cum)
 
 
 def kpgm_sample(
@@ -160,14 +174,81 @@ def kpgm_sample(
         # 22.0s cold -> 2.1s once sizes bucket into a handful of programs)
         batch = _bucket(max(int(need * oversample) + 16, 64))
         src, dst = sample_edge_batch(sub, thetas, batch)
+        # consume the FULL bucket-rounded batch: the candidates are iid, so
+        # the padding beyond need*oversample is free signal — discarding it
+        # (the PR-1 behaviour) only bought extra top-up rounds
         flat = np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
-        flat = flat[: int(need * oversample) + 16]
         _, first_idx = np.unique(flat, return_index=True)
         in_order = flat[np.sort(first_idx)]
         fresh = in_order[~np.isin(in_order, seen, assume_unique=True)]
         seen = np.concatenate([seen, fresh])
     seen = seen[:target] if seen.size > target else seen
     return np.stack([seen // n, seen % n], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("num_candidates",))
+def _many_round(
+    key: jax.Array,
+    thetas: jax.Array,
+    asks: jax.Array,
+    targets: jax.Array,
+    *,
+    num_candidates: int,
+):
+    """One fused device round for ALL graphs: descent + segmented dedup.
+
+    Fixed-shape outputs (candidate ids + take mask + per-graph counts), so
+    the program caches across calls of the same bucketed batch size.  Must be
+    called under dedup.call_x64 (packed int64 sort keys)."""
+    d = thetas.shape[0]
+    cum = _level_cumprobs(thetas)
+    u = jax.random.uniform(key, (num_candidates, d), dtype=jnp.float32)
+    src, dst = _descend(u, cum)
+    cum_asks = jnp.cumsum(asks)
+    graph_id = jnp.searchsorted(
+        cum_asks, jnp.arange(num_candidates, dtype=asks.dtype), side="right"
+    ).astype(jnp.int32)
+    take, counts = dedup.segmented_unique_mask(
+        graph_id, src, dst, cum_asks, targets, node_bits=d
+    )
+    return src, dst, take, counts
+
+
+def _host_topup(
+    key: jax.Array,
+    thetas: jax.Array,
+    n: int,
+    targets: np.ndarray,
+    seen: list,
+    max_rounds: int,
+    oversample: float,
+) -> list:
+    """Round-by-round host rejection loop (the PR-1 path), used to finish the
+    rare shortfall the single device round leaves behind.
+
+    ``seen`` holds per-graph flat keys (src * n + dst) in arrival order.
+    Dedup preserves ARRIVAL order: np.unique sorts by value, and truncating a
+    sorted list to the target count would bias kept edges toward low node
+    ids."""
+    for _ in range(max_rounds):
+        needs = np.array([t - s.size for t, s in zip(targets, seen)])
+        if needs.max(initial=0) <= 0:
+            break
+        asks, batch = dedup.plan_asks(needs, oversample)
+        key, sub = jax.random.split(key)
+        src, dst = sample_edge_batch(sub, thetas, batch)
+        flat = np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
+        off = 0
+        for i, ask in enumerate(np.asarray(asks)):
+            if ask == 0:
+                continue
+            chunk = flat[off : off + int(ask)]
+            off += int(ask)
+            _, first_idx = np.unique(chunk, return_index=True)
+            in_order = chunk[np.sort(first_idx)]
+            fresh = in_order[~np.isin(in_order, seen[i], assume_unique=False)]
+            seen[i] = np.concatenate([seen[i], fresh])[: targets[i]]
+    return seen
 
 
 def kpgm_sample_many(
@@ -177,6 +258,7 @@ def kpgm_sample_many(
     *,
     max_rounds: int = 8,
     oversample: float = 1.1,
+    backend: str = "auto",
 ) -> list:
     """Sample ``count`` independent KPGM graphs with SHARED device batches.
 
@@ -184,38 +266,58 @@ def kpgm_sample_many(
     kpgm_sample at a time pays per-call dispatch + top-up rounds B^2 times.
     Candidates are iid, so one large batch partitioned DISJOINTLY across the
     graphs preserves independence while amortising the device calls
-    (EXPERIMENTS.md Perf, sampler iteration 2)."""
+    (EXPERIMENTS.md Perf, sampler iteration 2).
+
+    With ``backend="auto"``/``"device"`` the first (and almost always only)
+    round runs fully on-device: one fused dispatch does descent + a single
+    sort-based segmented dedup over the packed keys of ALL graphs at once
+    (core/dedup.py), replacing the per-graph np.unique/np.isin loop.  The
+    residual shortfall (duplicate collisions) is finished by the host loop.
+    ``backend="host"`` forces the reference path.
+    """
     thetas = params.thetas
     n = params.num_nodes
+    d = params.d
     key, sub = jax.random.split(key)
     m, v = edge_moments(thetas)
     std = float(jnp.sqrt(jnp.maximum(m - v, 0.0)))
     draws = np.asarray(
         jax.random.normal(sub, (count,)) * std + float(m)
     )
-    targets = np.clip(np.round(draws), 0, n * n).astype(np.int64)
+    targets = np.clip(np.round(draws), 0, min(n * n, 2**62)).astype(np.int64)
+    if count == 0:
+        return []
+
+    total = int(targets.sum())
+    use_device = backend == "device" or (
+        backend == "auto"
+        and 0 < total
+        and total * oversample + 16 * count <= DEVICE_MAX_CANDIDATES
+    )
 
     seen = [np.empty((0,), dtype=np.int64) for _ in range(count)]
-    for _ in range(max_rounds):
-        needs = [int(t - s.size) for t, s in zip(targets, seen)]
-        asks = [max(int(nd * oversample) + 16, 0) if nd > 0 else 0 for nd in needs]
-        total = sum(asks)
-        if total == 0:
-            break
+    rounds_left = max_rounds
+    if use_device and total > 0:
+        asks, batch = dedup.plan_asks(targets, oversample)
         key, sub = jax.random.split(key)
-        batch = _bucket(total)
-        src, dst = sample_edge_batch(sub, thetas, batch)
-        flat = np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
-        off = 0
-        for i, ask in enumerate(asks):
-            if ask == 0:
-                continue
-            chunk = flat[off : off + ask]
-            off += ask
-            _, first_idx = np.unique(chunk, return_index=True)
-            in_order = chunk[np.sort(first_idx)]
-            fresh = in_order[~np.isin(in_order, seen[i], assume_unique=True)]
-            seen[i] = np.concatenate([seen[i], fresh])[: targets[i]]
+        src, dst, take, counts = dedup.call_x64(
+            _many_round,
+            sub,
+            thetas,
+            jnp.asarray(asks, jnp.int32),
+            jnp.asarray(targets, jnp.int32),
+            num_candidates=batch,
+        )
+        take_h = np.asarray(take)
+        flat = (
+            np.asarray(src, dtype=np.int64) * n + np.asarray(dst, dtype=np.int64)
+        )[take_h]
+        # taken edges stay grouped by graph (graph chunks are contiguous and
+        # the mask preserves order): split at the per-graph count boundaries
+        bounds = np.cumsum(np.asarray(counts, dtype=np.int64))[:-1]
+        seen = [s for s in np.split(flat, bounds)]
+        rounds_left -= 1
+    seen = _host_topup(key, thetas, n, targets, seen, rounds_left, oversample)
     return [np.stack([s // n, s % n], axis=1) for s in seen]
 
 

@@ -14,17 +14,46 @@ are Erdos-Renyi uniform blocks (every node in a heavy group shares one
 configuration, so the edge probability is a single scalar P_{lam'_i, lam'_j}).
 The remaining "light" nodes W are quilted with B <= B'.  B' is chosen by
 minimising the cost model T(B') = B'^2 log(n)|E| + (|W|+d)R + dR^2.
+
+Sampling pipeline (device-resident quilting)
+--------------------------------------------
+
+``quilt_sample`` runs the whole B^2-block hot path in O(1) device dispatches
+per top-up round instead of O(B^2) host round-trips:
+
+1. **Plan** — :func:`get_quilt_plan` builds a :class:`QuiltPlan` ONCE per
+   (attribute matrix, thetas) pair and caches it: the Theorem-2 partition,
+   the padded per-block sorted-config lookup tables (+ the dense config ->
+   node inverse used by the CPU fast path), the cumulative quadrant
+   probabilities and the |E| moments, all as device arrays.
+2. **Descent + lookup** — one fused program draws candidates for ALL block
+   pairs at once: quadrant descent produces config ids, which are mapped
+   through the per-block lookup tables on-device (Pallas kernel
+   ``kernels/quadrant_descent.quilt_descent_lookup`` on TPU, jnp dense-gather
+   fallback on CPU), emitting ``(src_node, dst_node)`` with -1 marking a
+   membership miss — the filter never leaves the device.
+3. **Segmented dedup** — the same program runs the sort-based segmented
+   dedup (core/dedup.py) over ``(graph_id << 2d) | src << d | dst`` packed
+   keys of all B^2 graphs at once, returning a fixed-shape take mask plus
+   per-graph unique counts, so the compiled program caches across calls.
+4. **Host gather** — ONE transfer of the masked node ids materialises the
+   edge list; the rare duplicate-collision shortfall is topped up by the
+   small host rejection loop (same arrival-order semantics as PR 1).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+import functools
+import hashlib
+from collections import OrderedDict
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kpgm, magm, partition
+from repro.core import dedup, kpgm, magm, partition
+from repro.kernels import ops
 
 
 class QuiltStats(NamedTuple):
@@ -46,11 +75,174 @@ def _dedupe(edges: np.ndarray) -> np.ndarray:
     return np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
 
 
+# ---------------------------------------------------------------------------
+# QuiltPlan: everything quilt_sample needs, built once per attribute matrix
+# ---------------------------------------------------------------------------
+
+# dense config->node inverse above this many entries would dominate memory;
+# larger plans fall back to the sorted-table kernel / host path
+DENSE_INV_CAP = 1 << 24
+
+
+class QuiltPlan(NamedTuple):
+    """Precomputed device state for quilting one attribute matrix."""
+
+    n: int
+    d: int
+    B: int
+    part: partition.Partition  # host-side partition (top-up + stats)
+    thetas: jax.Array  # (d, 2, 2)
+    cum: jax.Array  # (d, 4) cumulative quadrant probabilities
+    table_cfg: jax.Array  # (B, L) sorted configs, CFG_SENTINEL padded
+    table_node: jax.Array  # (B, L) node ids, -1 padded
+    inv: Optional[jax.Array]  # (B, 2^d) dense inverse or None
+    mean_edges: float  # E|E| of one KPGM draw
+    std_edges: float  # sqrt(m - v)
+
+    @property
+    def num_graphs(self) -> int:
+        return self.B * self.B
+
+
+PLAN_STATS = {"partition_builds": 0, "plan_builds": 0, "plan_hits": 0}
+_PART_CACHE: "OrderedDict" = OrderedDict()
+_PLAN_CACHE: "OrderedDict" = OrderedDict()
+_CACHE_MAX = 8
+
+
+def clear_plan_cache() -> None:
+    _PART_CACHE.clear()
+    _PLAN_CACHE.clear()
+
+
+def _digest(a: np.ndarray):
+    a = np.ascontiguousarray(a)
+    return (a.shape, a.dtype.str, hashlib.sha1(a.tobytes()).hexdigest())
+
+
+def _cache_put(cache: OrderedDict, key, value) -> None:
+    cache[key] = value
+    cache.move_to_end(key)
+    while len(cache) > _CACHE_MAX:
+        cache.popitem(last=False)
+
+
+def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
+    """Build (or fetch) the QuiltPlan for an (F, thetas) pair.
+
+    Keyed by content: repeated samples over the same attribute matrix reuse
+    the cached partition + device tables (no re-partition), and the same F
+    under new thetas only re-derives the theta-dependent pieces.
+    """
+    F = np.asarray(F)
+    th = np.asarray(thetas)
+    fkey = _digest(F)
+    tkey = _digest(th)
+    plan = _PLAN_CACHE.get((fkey, tkey))
+    if plan is not None:
+        PLAN_STATS["plan_hits"] += 1
+        _PLAN_CACHE.move_to_end((fkey, tkey))
+        return plan
+
+    n, d = F.shape
+    cached_part = _PART_CACHE.get(fkey)
+    if cached_part is None:
+        lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
+        part = partition.build_partition(lam)
+        PLAN_STATS["partition_builds"] += 1
+        tables = partition.padded_lookup_tables(part) if part.B else None
+        inv_np = (
+            partition.dense_inverse(part, d)
+            if part.B and part.B * (1 << d) <= DENSE_INV_CAP
+            else None
+        )
+        cached_part = (part, tables, inv_np)
+        _cache_put(_PART_CACHE, fkey, cached_part)
+    part, tables, inv_np = cached_part
+
+    th_dev = jnp.asarray(th)
+    cum = kpgm._level_cumprobs(th_dev)
+    m, v = kpgm.edge_moments(th_dev)
+    plan = QuiltPlan(
+        n=n,
+        d=d,
+        B=part.B,
+        part=part,
+        thetas=th_dev,
+        cum=cum,
+        table_cfg=jnp.asarray(tables.configs) if tables else jnp.zeros((0, 8), jnp.int32),
+        table_node=jnp.asarray(tables.nodes) if tables else jnp.zeros((0, 8), jnp.int32),
+        inv=jnp.asarray(inv_np) if inv_np is not None else None,
+        mean_edges=float(m),
+        std_edges=float(jnp.sqrt(jnp.maximum(m - v, 0.0))),
+    )
+    PLAN_STATS["plan_builds"] += 1
+    _cache_put(_PLAN_CACHE, (fkey, tkey), plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Device-resident quilting
+# ---------------------------------------------------------------------------
+
+# one fused dispatch per top-up round + the final gather; tests assert the
+# total stays O(max_rounds), independent of B^2
+DISPATCH_COUNTERS = {"device_rounds": 0, "host_topup_rounds": 0}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_candidates", "num_blocks", "use_kernel")
+)
+def _quilt_round(
+    key: jax.Array,
+    cum: jax.Array,
+    tables,
+    asks: jax.Array,
+    targets: jax.Array,
+    *,
+    num_candidates: int,
+    num_blocks: int,
+    use_kernel: bool,
+):
+    """One fused device round: descent -> block lookup -> segmented dedup.
+
+    Returns fixed-shape (scfg, dcfg, snode, dnode, take, counts); call under
+    dedup.call_x64.  ``tables`` is (table_cfg, table_node) for the Pallas
+    kernel path or (inv,) for the jnp dense-gather path (CPU)."""
+    d = cum.shape[0]
+    u = jax.random.uniform(key, (num_candidates, d), dtype=jnp.float32)
+    cum_asks = jnp.cumsum(asks)
+    graph_id = jnp.searchsorted(
+        cum_asks, jnp.arange(num_candidates, dtype=asks.dtype), side="right"
+    ).astype(jnp.int32)
+    kb = graph_id // num_blocks
+    lb = graph_id % num_blocks
+    if use_kernel:
+        table_cfg, table_node = tables
+        scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
+            u, cum, kb, lb, table_cfg, table_node
+        )
+    else:
+        (inv,) = tables
+        scfg, dcfg = kpgm._descend(u, cum)
+        flat = inv.reshape(-1)
+        snode = flat[(kb << d) | scfg]
+        dnode = flat[(lb << d) | dcfg]
+    take, counts = dedup.segmented_unique_mask(
+        graph_id, scfg, dcfg, cum_asks, targets, node_bits=d
+    )
+    return scfg, dcfg, snode, dnode, take, counts
+
+
 def quilt_sample(
     key: jax.Array,
     params: magm.MAGMParams,
     F: np.ndarray,
     *,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    backend: str = "auto",
+    use_kernel: Optional[bool] = None,
     return_stats: bool = False,
 ) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
     """Sample a MAGM graph by quilting (Algorithm 2).  Returns (E, 2) int64.
@@ -58,17 +250,190 @@ def quilt_sample(
     ``F`` is the (n, d) attribute matrix (sample with magm.sample_attributes or
     supply observed attributes).  Requires d == log2-range of configs; node
     count n is free (the KPGM draws live in config space of size 2^d).
+
+    The default backend runs the device-resident pipeline (module docstring);
+    ``backend="host"`` forces the PR-1 reference path (also used automatically
+    when the plan has no dense inverse or the batch exceeds
+    kpgm.DEVICE_MAX_CANDIDATES).  ``use_kernel`` overrides the Pallas-vs-jnp
+    lookup choice (defaults to the Pallas kernel on real TPUs only).
     """
     F = np.asarray(F)
-    lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
-    part = partition.build_partition(lam)
-    kp = kpgm.KPGMParams(params.thetas)
+    if F.size == 0:
+        out = np.zeros((0, 2), dtype=np.int64)
+        if return_stats:
+            return out, QuiltStats(0, 0, 0, 0, 0, 0, None)
+        return out
+    plan = get_quilt_plan(F, params.thetas)
+    G = plan.num_graphs
+    ncfg = 1 << plan.d
 
+    key, sub = jax.random.split(key)
+    draws = (
+        np.asarray(jax.random.normal(sub, (G,))) * plan.std_edges
+        + plan.mean_edges
+    )
+    targets = np.clip(np.round(draws), 0, min(ncfg * ncfg, 2**62)).astype(
+        np.int64
+    )
+    total = int(targets.sum())
+
+    if use_kernel is None:
+        use_kernel = not ops.INTERPRET
+    if plan.inv is None and not use_kernel:
+        # no dense inverse (B * 2^d over DENSE_INV_CAP): the sorted-table
+        # kernel path is the only device lookup that exists at this size
+        use_kernel = True
+    use_device = backend == "device" or (
+        backend == "auto"
+        and (plan.inv is not None or use_kernel)
+        and total * oversample + 16 * G <= kpgm.DEVICE_MAX_CANDIDATES
+    )
+    if not use_device:
+        return _quilt_sample_host(key, params, plan, return_stats)
+
+    edges_src: List[np.ndarray] = []
+    edges_dst: List[np.ndarray] = []
+    counts = np.zeros(G, dtype=np.int64)
+    seen_cfg: Optional[List[np.ndarray]] = None
+
+    if total > 0:
+        asks, batch = dedup.plan_asks(targets, oversample)
+        key, sub = jax.random.split(key)
+        tables = (
+            (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
+        )
+        scfg, dcfg, snode, dnode, take, cnts = dedup.call_x64(
+            _quilt_round,
+            sub,
+            plan.cum,
+            tables,
+            jnp.asarray(asks, jnp.int32),
+            jnp.asarray(targets, jnp.int32),
+            num_candidates=batch,
+            num_blocks=plan.B,
+            use_kernel=use_kernel,
+        )
+        DISPATCH_COUNTERS["device_rounds"] += 1
+        take_h = np.asarray(take)
+        sn = np.asarray(snode)
+        dn = np.asarray(dnode)
+        counts = np.asarray(cnts).astype(np.int64)
+        keep = take_h & (sn >= 0) & (dn >= 0)
+        edges_src.append(sn[keep].astype(np.int64))
+        edges_dst.append(dn[keep].astype(np.int64))
+        if (targets - counts).max(initial=0) > 0:
+            # transfer config ids only when a top-up is actually needed
+            flat_taken = (
+                np.asarray(scfg)[take_h].astype(np.int64) * ncfg
+                + np.asarray(dcfg)[take_h].astype(np.int64)
+            )
+            seen_cfg = list(np.split(flat_taken, np.cumsum(counts)[:-1]))
+
+    if seen_cfg is not None:
+        counts = _host_quilt_topup(
+            key,
+            plan,
+            targets,
+            counts,
+            seen_cfg,
+            edges_src,
+            edges_dst,
+            max_rounds - 1,
+            oversample,
+        )
+
+    out = (
+        np.stack(
+            [np.concatenate(edges_src), np.concatenate(edges_dst)], axis=1
+        )
+        if edges_src and sum(e.size for e in edges_src)
+        else np.zeros((0, 2), dtype=np.int64)
+    )
+    # Blocks are disjoint in node space (each (i, j) pair belongs to exactly
+    # one (|Z_i|, |Z_j|) block), so no cross-block dedup is needed.
+    if return_stats:
+        return out, QuiltStats(
+            B=plan.B,
+            num_kpgm_draws=G,
+            kpgm_edges_total=int(counts.sum()),
+            kept_edges=out.shape[0],
+            heavy_groups=0,
+            light_nodes=F.shape[0],
+            bprime=None,
+        )
+    return out
+
+
+def _host_quilt_topup(
+    key: jax.Array,
+    plan: QuiltPlan,
+    targets: np.ndarray,
+    counts: np.ndarray,
+    seen_cfg: List[np.ndarray],
+    edges_src: List[np.ndarray],
+    edges_dst: List[np.ndarray],
+    max_rounds: int,
+    oversample: float,
+) -> np.ndarray:
+    """Finish the duplicate-collision shortfall of the device round.
+
+    Per top-up round: ONE small device batch shared across the short graphs,
+    then host-side arrival-order dedup + block lookup (the shortfall is a few
+    edges, so the O(B) python loop here is off the hot path)."""
+    ncfg = 1 << plan.d
+    part = plan.part
+    for _ in range(max_rounds):
+        needs = targets - counts
+        if needs.max(initial=0) <= 0:
+            break
+        asks, batch = dedup.plan_asks(needs, oversample)
+        key, sub = jax.random.split(key)
+        s2, d2 = kpgm.sample_edge_batch(sub, plan.thetas, batch)
+        DISPATCH_COUNTERS["host_topup_rounds"] += 1
+        flat = np.asarray(s2, dtype=np.int64) * ncfg + np.asarray(
+            d2, dtype=np.int64
+        )
+        off = 0
+        for g, ask in enumerate(np.asarray(asks)):
+            if ask == 0:
+                continue
+            chunk = flat[off : off + int(ask)]
+            off += int(ask)
+            _, first_idx = np.unique(chunk, return_index=True)
+            in_order = chunk[np.sort(first_idx)]
+            fresh = in_order[~np.isin(in_order, seen_cfg[g])]
+            fresh = fresh[: int(needs[g])]
+            if fresh.size == 0:
+                continue
+            seen_cfg[g] = np.concatenate([seen_cfg[g], fresh])
+            counts[g] += fresh.size
+            k, l = g // plan.B, g % plan.B
+            sn = partition.lookup_nodes(
+                part.sorted_configs[k], part.sorted_nodes[k], fresh // ncfg
+            )
+            dn = partition.lookup_nodes(
+                part.sorted_configs[l], part.sorted_nodes[l], fresh % ncfg
+            )
+            keep = (sn >= 0) & (dn >= 0)
+            if keep.any():
+                edges_src.append(sn[keep])
+                edges_dst.append(dn[keep])
+    return counts
+
+
+def _quilt_sample_host(
+    key: jax.Array,
+    params: magm.MAGMParams,
+    plan: QuiltPlan,
+    return_stats: bool,
+):
+    """PR-1 reference path: kpgm_sample_many + per-block host lookup."""
+    part = plan.part
+    kp = kpgm.KPGMParams(params.thetas)
     edges = []
     draws = part.B * part.B
     kpgm_total = 0
     key, sub = jax.random.split(key)
-    # all B^2 independent KPGM draws from shared device batches
     graphs = kpgm.kpgm_sample_many(sub, kp, draws)
     for k in range(part.B):
         for l in range(part.B):
@@ -91,8 +456,6 @@ def quilt_sample(
         if edges
         else np.zeros((0, 2), dtype=np.int64)
     )
-    # Blocks are disjoint in node space (each (i, j) pair belongs to exactly
-    # one (|Z_i|, |Z_j|) block), so no cross-block dedup is needed.
     if return_stats:
         return out, QuiltStats(
             B=part.B,
@@ -100,7 +463,7 @@ def quilt_sample(
             kpgm_edges_total=kpgm_total,
             kept_edges=out.shape[0],
             heavy_groups=0,
-            light_nodes=F.shape[0],
+            light_nodes=plan.n,
             bprime=None,
         )
     return out
@@ -112,33 +475,24 @@ def quilt_sample(
 
 
 def _er_block(
-    rng: np.random.Generator, ns: int, nt: int, p: float, max_retry: int = 8
+    rng: np.random.Generator, ns: int, nt: int, p: float
 ) -> np.ndarray:
     """Erdos-Renyi directed block: each of the ns*nt cells is an edge w.p. p.
 
     Distributionally equivalent to the paper's geometric skip-sampling: draw
-    the edge COUNT ~ Binomial(ns*nt, p), then place edges uniformly without
-    replacement (fixed-shape + dedup-retry; DESIGN.md section 3, change (b)).
+    the edge COUNT ~ Binomial(ns*nt, p), then place that many distinct cells
+    uniformly (the single-block case of :func:`_sample_cells`, which the
+    batched R^2 heavy path uses directly).
     """
     cells = ns * nt
     if cells == 0 or p <= 0.0:
         return np.zeros((0, 2), dtype=np.int64)
-    p = min(p, 1.0)
-    count = rng.binomial(cells, p)
+    count = rng.binomial(cells, min(p, 1.0))
     if count == 0:
         return np.zeros((0, 2), dtype=np.int64)
-    if count > cells // 2:
-        # dense block: complement trick keeps uniform-without-replacement exact
-        flat = rng.permutation(cells)[:count]
-    else:
-        flat = np.unique(rng.integers(0, cells, size=int(count * 1.1) + 8))
-        for _ in range(max_retry):
-            if flat.size >= count:
-                break
-            extra = rng.integers(0, cells, size=count)
-            flat = np.unique(np.concatenate([flat, extra]))
-        rng.shuffle(flat)
-        flat = flat[:count]
+    flat = _sample_cells(
+        rng, np.array([count], np.int64), np.array([cells], np.int64)
+    )
     return np.stack([flat // nt, flat % nt], axis=1).astype(np.int64)
 
 
@@ -206,25 +560,36 @@ def quilt_sample_fast(
 
     # Edge probabilities between configurations via the bilinear form.
     if R:
+        sizes = np.array([g.size for g in heavy_groups], dtype=np.int64)
+        offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        cat = np.concatenate(heavy_groups)
         heavy_attr = np.asarray(
             magm.attributes_from_configs(jnp.asarray(heavy_cfgs), d)
         )
-        # (2) heavy x heavy blocks (including the diagonal): scalar-p ER blocks.
+        # (2) heavy x heavy blocks (including the diagonal): scalar-p ER
+        # blocks, all R^2 at once — one batched binomial for the counts and
+        # one _sample_cells call for every block's distinct flat cell ids.
         logq_hh = np.asarray(
             magm.log_edge_prob(
                 jnp.asarray(heavy_attr), jnp.asarray(heavy_attr), params.thetas
             )
         )
-        for a in range(R):
-            ga = heavy_groups[a]
-            for b in range(R):
-                gb = heavy_groups[b]
-                blk = _er_block(rng, ga.size, gb.size, float(np.exp(logq_hh[a, b])))
-                if blk.size:
-                    pieces.append(np.stack([ga[blk[:, 0]], gb[blk[:, 1]]], axis=1))
+        cells = sizes[:, None] * sizes[None, :]
+        counts_hh = rng.binomial(
+            cells, np.minimum(np.exp(logq_hh), 1.0)
+        ).reshape(-1)
+        cell_ids = _sample_cells(rng, counts_hh, cells.reshape(-1))
+        if cell_ids.size:
+            rep = np.repeat(np.arange(R * R), counts_hh)
+            a, b = rep // R, rep % R
+            rr, cc = cell_ids // sizes[b], cell_ids % sizes[b]
+            pieces.append(
+                np.stack([cat[offs[a] + rr], cat[offs[b] + cc]], axis=1)
+            )
 
         # (3) light x heavy and heavy x light strips: per light node i the
-        # probability against group b is the scalar P_{lam_i, lam'_b}.
+        # probability against group b is the scalar P_{lam_i, lam'_b}; both
+        # directions batch the |W| x R binomials and share one _sample_cells.
         if W.size:
             logq_wh = np.asarray(
                 magm.log_edge_prob(
@@ -236,22 +601,23 @@ def quilt_sample_fast(
                     jnp.asarray(heavy_attr), jnp.asarray(F[W]), params.thetas
                 )
             )  # (R, |W|)
-            for b in range(R):
-                gb = heavy_groups[b]
-                pw = np.exp(logq_wh[:, b])
-                counts_w = rng.binomial(gb.size, np.minimum(pw, 1.0))
-                tot = int(counts_w.sum())
-                if tot:
-                    rows = np.repeat(W, counts_w)
-                    cols = _sample_cols(rng, counts_w, gb)
-                    pieces.append(np.stack([rows, cols], axis=1))
-                ph = np.exp(logq_hw[b, :])
-                counts_h = rng.binomial(gb.size, np.minimum(ph, 1.0))
-                tot = int(counts_h.sum())
-                if tot:
-                    cols2 = np.repeat(W, counts_h)
-                    rows2 = _sample_cols(rng, counts_h, gb)
-                    pieces.append(np.stack([rows2, cols2], axis=1))
+            sizes_rep = np.tile(sizes, W.size)
+            for logq, flip in ((logq_wh, False), (logq_hw.T, True)):
+                counts_s = rng.binomial(
+                    sizes[None, :], np.minimum(np.exp(logq), 1.0)
+                ).reshape(-1)  # row-major over (light i, group b)
+                cols = _sample_cells(rng, counts_s, sizes_rep)
+                if not cols.size:
+                    continue
+                rep = np.repeat(np.arange(W.size * R), counts_s)
+                i, b = rep // R, rep % R
+                light = W[i]
+                heavy = cat[offs[b] + cols]
+                pieces.append(
+                    np.stack(
+                        [heavy, light] if flip else [light, heavy], axis=1
+                    )
+                )
 
     out = (
         _dedupe(np.concatenate(pieces, axis=0))
@@ -275,42 +641,50 @@ _RESAMPLE_ROUNDS = 32
 _DENSE_CHUNK_CELLS = 1 << 22  # cap the (rows, G) key matrix at ~32 MB
 
 
-def _sample_cols(
-    rng: np.random.Generator, counts: np.ndarray, group: np.ndarray
+def _sample_cells(
+    rng: np.random.Generator, counts: np.ndarray, sizes: np.ndarray
 ) -> np.ndarray:
-    """For each row i, draw counts[i] distinct members of ``group``.
+    """For each row i, draw counts[i] DISTINCT integers in [0, sizes[i]).
 
-    Fully vectorised (no per-row Python loop):
+    The generalisation of the old fixed-group ``_sample_cols`` to per-row
+    ranges, so ALL R^2 heavy blocks (whose cell spaces differ) share one
+    vectorised call.  counts are clipped to sizes; rows stay in order and
+    zero-count rows contribute nothing.
 
-    - DENSE rows (counts[i] > |group| / 2) take the first counts[i] entries
-      of a random-key argsort — an exact uniform draw without replacement,
-      batched over all dense rows at once (chunked to bound memory).
+    - DENSE rows (counts[i] > sizes[i] / 2) take the first counts[i] entries
+      of a random-key argsort with out-of-range columns pushed to the end —
+      an exact uniform draw without replacement, batched + chunked.
     - SPARSE rows draw with replacement, then only the colliding slots are
       redrawn, globally across all rows per round (duplicates are found with
-      one sort over row-tagged keys).  Collisions are rare at counts well
-      below |group|, so this converges in O(1) rounds; any row still
-      colliding after ``_RESAMPLE_ROUNDS`` falls back to an exact
+      one sort over row-tagged keys); pathological rows fall back to an exact
       ``rng.choice(..., replace=False)``.
     """
-    counts = np.asarray(counts)
-    g = int(group.size)
-    pos = np.minimum(counts[counts > 0], g)  # clip BEFORE sizing the output
+    counts = np.asarray(counts, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.int64)
+    pos_mask = counts > 0
+    pos = np.minimum(counts[pos_mask], sizes[pos_mask])
+    sz = sizes[pos_mask]
     tot = int(pos.sum())
     if tot == 0:
-        return group[:0].astype(group.dtype)
+        return np.empty(0, dtype=np.int64)
     seg_id = np.repeat(np.arange(pos.size, dtype=np.int64), pos)
     cols = np.empty(tot, dtype=np.int64)
 
-    dense_seg = pos > g // 2
+    dense_seg = pos > sz // 2
     dense_slot = dense_seg[seg_id]
     if dense_seg.any():
         lens = pos[dense_seg]
+        szs = sz[dense_seg]
+        gmax = int(szs.max())
         picks = []
-        rows_per_chunk = max(1, _DENSE_CHUNK_CELLS // g)
+        rows_per_chunk = max(1, _DENSE_CHUNK_CELLS // max(gmax, 1))
         for lo in range(0, lens.size, rows_per_chunk):
-            chunk = lens[lo : lo + rows_per_chunk]
-            order = np.argsort(rng.random((chunk.size, g)), axis=1)
-            mask = np.arange(g)[None, :] < chunk[:, None]
+            chunk_len = lens[lo : lo + rows_per_chunk]
+            chunk_sz = szs[lo : lo + rows_per_chunk]
+            keys = rng.random((chunk_len.size, gmax))
+            keys[np.arange(gmax)[None, :] >= chunk_sz[:, None]] = 2.0
+            order = np.argsort(keys, axis=1)
+            mask = np.arange(gmax)[None, :] < chunk_len[:, None]
             picks.append(order[mask])  # row-major: chunk rows stay in order
         cols[dense_slot] = np.concatenate(picks)
 
@@ -318,10 +692,11 @@ def _sample_cols(
     ns = int(sparse_slot.sum())
     if ns:
         sid = seg_id[sparse_slot]
-        sub = rng.integers(0, g, size=ns)
+        smax = int(sz.max())
+        sub = rng.integers(0, sz[sid])
         dup = np.zeros(ns, dtype=bool)
         for _ in range(_RESAMPLE_ROUNDS):
-            key = sid * g + sub
+            key = sid * smax + sub
             order = np.argsort(key, kind="stable")
             sk = key[order]
             dup[:] = False
@@ -329,13 +704,25 @@ def _sample_cols(
             n_dup = int(dup.sum())
             if not n_dup:
                 break
-            sub[dup] = rng.integers(0, g, size=n_dup)
+            sub[dup] = rng.integers(0, sz[sid[dup]])
         else:  # pathological rows: exact fallback, loops only over offenders
             for s in np.unique(sid[dup]):
                 m = sid == s
-                sub[m] = rng.choice(g, size=int(m.sum()), replace=False)
+                sub[m] = rng.choice(int(sz[s]), size=int(m.sum()), replace=False)
         cols[sparse_slot] = sub
-    return group[cols]
+    return cols
+
+
+def _sample_cols(
+    rng: np.random.Generator, counts: np.ndarray, group: np.ndarray
+) -> np.ndarray:
+    """For each row i, draw counts[i] distinct members of ``group`` (the
+    fixed-group special case of :func:`_sample_cells`)."""
+    counts = np.asarray(counts)
+    cells = _sample_cells(
+        rng, counts, np.full(counts.shape, group.size, dtype=np.int64)
+    )
+    return group[cells]
 
 
 def naive_reference_sample(

@@ -45,6 +45,33 @@ def sample_edge_batch_pallas(
     return src[:num_edges], dst[:num_edges]
 
 
+def quilt_descent_lookup_pallas(
+    uniforms: jax.Array,
+    cumprobs: jax.Array,
+    kb: jax.Array,
+    lb: jax.Array,
+    table_cfg: jax.Array,
+    table_node: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused descent + block lookup (drop-in device step of quilt_sample).
+
+    Pads the candidate axis to TILE (padding candidates search block 0 and
+    are sliced off) and flips interpret mode per backend.  Note the CPU
+    interpret path is for validation-scale inputs: the quilt hot loop calls
+    the kernel only when a real TPU backend is present and otherwise uses the
+    jnp dense-inverse lookup (core/quilt.py), exactly as kpgm.sample_edge_batch
+    does for the plain descent kernel.
+    """
+    n = uniforms.shape[0]
+    u = _pad_to(uniforms, 0, _qd.TILE)
+    kb2 = _pad_to(kb.reshape(-1, 1).astype(jnp.int32), 0, _qd.TILE)
+    lb2 = _pad_to(lb.reshape(-1, 1).astype(jnp.int32), 0, _qd.TILE)
+    scfg, dcfg, snode, dnode = _qd.quilt_descent_lookup(
+        u, cumprobs, kb2, lb2, table_cfg, table_node, interpret=INTERPRET
+    )
+    return scfg[:n], dcfg[:n], snode[:n], dnode[:n]
+
+
 def _packed_bilinear(thetas: jax.Array, d_pad: int):
     bl = magm.bilinear_decompose(thetas)
     u = _pad_to(bl.u[None, :], 1, d_pad)

@@ -52,8 +52,131 @@ def _kernel(u_ref, cum_ref, src_ref, dst_ref, *, d: int):
     # constant, which pallas_call forbids)
     k = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
     pows = jnp.int32(1) << (jnp.int32(d - 1) - k)
-    src_ref[...] = jnp.sum(a * pows, axis=1, keepdims=True)
-    dst_ref[...] = jnp.sum(b * pows, axis=1, keepdims=True)
+    src_ref[...] = jnp.sum(a * pows, axis=1, keepdims=True, dtype=jnp.int32)
+    dst_ref[...] = jnp.sum(b * pows, axis=1, keepdims=True, dtype=jnp.int32)
+
+
+def _quilt_kernel(
+    u_ref,
+    cum_ref,
+    kb_ref,
+    lb_ref,
+    tcfg_ref,
+    tnode_ref,
+    scfg_ref,
+    dcfg_ref,
+    snode_ref,
+    dnode_ref,
+    *,
+    d: int,
+    table_width: int,
+    steps: int,
+):
+    """Fused quadrant descent + per-block sorted-config lookup.
+
+    One grid step descends a (TILE, d) block of uniforms AND binary-searches
+    the resulting config ids in the (B, L) sorted lookup tables of their
+    assigned source/target blocks, emitting node ids (-1 on membership miss).
+    Membership filtering therefore never leaves the device: the quilting loop
+    consumes (src_node, dst_node, valid) directly instead of round-tripping
+    B^2 config arrays through the host `searchsorted` path.
+    """
+    u = u_ref[...]  # (TILE, d) f32
+    cum = cum_ref[...]  # (d, 4) f32
+    quad = (
+        (u >= cum[None, :, 0]).astype(jnp.int32)
+        + (u >= cum[None, :, 1]).astype(jnp.int32)
+        + (u >= cum[None, :, 2]).astype(jnp.int32)
+    )
+    a = quad >> 1
+    b = quad & 1
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
+    pows = jnp.int32(1) << (jnp.int32(d - 1) - k)
+    # pin the accumulator: under the x64 context jnp.sum would widen to int64
+    scfg = jnp.sum(a * pows, axis=1, keepdims=True, dtype=jnp.int32)
+    dcfg = jnp.sum(b * pows, axis=1, keepdims=True, dtype=jnp.int32)
+
+    flat_cfg = tcfg_ref[...].reshape(-1)  # (B * L,)
+    flat_node = tnode_ref[...].reshape(-1)
+    length = jnp.int32(table_width)
+
+    def lower_bound(row, target):
+        """Vectorised per-candidate binary search in each candidate's block
+        row; `steps` iterations bound any window of width <= table_width."""
+        lo = jnp.zeros_like(target)
+        hi = jnp.full_like(target, length)
+        for _ in range(steps):
+            mid = (lo + hi) >> 1
+            probe = flat_cfg[row * length + jnp.minimum(mid, length - 1)]
+            active = lo < hi
+            go_right = active & (probe < target)
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        pos = jnp.minimum(lo, length - 1)
+        hit = flat_cfg[row * length + pos] == target
+        return jnp.where(hit, flat_node[row * length + pos], -1)
+
+    snode_ref[...] = lower_bound(kb_ref[...], scfg)
+    dnode_ref[...] = lower_bound(lb_ref[...], dcfg)
+    scfg_ref[...] = scfg
+    dcfg_ref[...] = dcfg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quilt_descent_lookup(
+    uniforms: jax.Array,
+    cumprobs: jax.Array,
+    kb: jax.Array,
+    lb: jax.Array,
+    table_cfg: jax.Array,
+    table_node: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """Fused Algorithm-1 descent + block-membership lookup.
+
+    Args:
+      uniforms:   (N, d) f32, N a multiple of TILE (ops.py pads).
+      cumprobs:   (d, 4) cumulative quadrant probabilities.
+      kb, lb:     (N, 1) int32 source/target block ids per candidate.
+      table_cfg:  (B, L) int32 per-block configs, each row ascending, padded
+                  with INT32_MAX sentinels (partition.padded_lookup_tables).
+      table_node: (B, L) int32 node ids aligned with table_cfg, padding -1.
+
+    Returns (src_cfg, dst_cfg, src_node, dst_node), each (N,) int32 with
+    node = -1 when the config is not a member of the block.  Like the other
+    kernels this validates on CPU with interpret=True; on TPU the (B, L)
+    tables stay VMEM-resident across the whole edge-axis grid.
+    """
+    n, d = uniforms.shape
+    if n % TILE:
+        raise ValueError(f"N={n} must be a multiple of TILE={TILE}")
+    bsz, width = table_cfg.shape
+    steps = max(width - 1, 1).bit_length() + 1
+    grid = (n // TILE,)
+    out = pl.pallas_call(
+        functools.partial(
+            _quilt_kernel, d=d, table_width=width, steps=steps
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 4), lambda i: (0, 0)),
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bsz, width), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, width), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)) for _ in range(4)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32) for _ in range(4)
+        ],
+        interpret=interpret,
+    )(uniforms, cumprobs, kb, lb, table_cfg, table_node)
+    scfg, dcfg, snode, dnode = out
+    return scfg[:, 0], dcfg[:, 0], snode[:, 0], dnode[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

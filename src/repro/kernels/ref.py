@@ -18,6 +18,40 @@ def quadrant_descent_ref(uniforms: jax.Array, cumprobs: jax.Array):
     return a @ pows, b @ pows
 
 
+def sorted_table_lookup_ref(
+    table_cfg: jax.Array, table_node: jax.Array, row: jax.Array, cfg: jax.Array
+) -> jax.Array:
+    """Per-block sorted-config lookup oracle: node id or -1 per candidate.
+
+    ``table_cfg`` rows are ascending with INT32_MAX padding; ``row`` selects
+    the block each candidate searches.  Loops over the (few) blocks with
+    jnp.searchsorted — the readable reference for the in-kernel search.
+    """
+    bsz, width = table_cfg.shape
+    out = jnp.full(cfg.shape, -1, jnp.int32)
+    for b in range(bsz):
+        pos = jnp.minimum(jnp.searchsorted(table_cfg[b], cfg), width - 1)
+        hit = table_cfg[b][pos] == cfg
+        val = jnp.where(hit, table_node[b][pos], -1)
+        out = jnp.where(row == b, val, out)
+    return out
+
+
+def quilt_descent_lookup_ref(
+    uniforms: jax.Array,
+    cumprobs: jax.Array,
+    kb: jax.Array,
+    lb: jax.Array,
+    table_cfg: jax.Array,
+    table_node: jax.Array,
+):
+    """Oracle for the fused descent+lookup kernel (quadrant_descent.py)."""
+    scfg, dcfg = quadrant_descent_ref(uniforms, cumprobs)
+    snode = sorted_table_lookup_ref(table_cfg, table_node, kb, scfg)
+    dnode = sorted_table_lookup_ref(table_cfg, table_node, lb, dcfg)
+    return scfg, dcfg, snode, dnode
+
+
 def magm_logprob_ref(
     F_src: jax.Array,
     F_dst: jax.Array,

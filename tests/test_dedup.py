@@ -1,0 +1,126 @@
+"""Device segmented dedup == the PR-1 host np.unique path, per graph.
+
+The sorted segmented dedup (core/dedup.py) must reproduce the host
+semantics exactly: per graph, keep the FIRST ``target`` distinct (src, dst)
+pairs of the candidate stream in arrival order.  Covers the packed-int64 and
+multi-operand sort paths, the all-duplicates and zero-target edge cases, and
+the batch-planning helpers."""
+
+import numpy as np
+import pytest
+
+from repro.core import dedup
+
+
+def _random_case(rng, num_graphs, node_bits, max_ask, dup_heavy=False):
+    asks = rng.integers(0, max_ask, size=num_graphs)
+    n_ids = 4 if dup_heavy else (1 << node_bits)
+    total = int(asks.sum())
+    src = rng.integers(0, n_ids, size=total).astype(np.int32)
+    dst = rng.integers(0, n_ids, size=total).astype(np.int32)
+    targets = rng.integers(0, max_ask, size=num_graphs)
+    return src, dst, asks, targets
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("dup_heavy", [False, True])
+def test_matches_host_unique_exactly(seed, dup_heavy):
+    rng = np.random.default_rng(seed)
+    src, dst, asks, targets = _random_case(
+        rng, num_graphs=7, node_bits=5, max_ask=200, dup_heavy=dup_heavy
+    )
+    take, counts = dedup.segmented_unique(src, dst, asks, targets, node_bits=5)
+    tref, cref = dedup.host_unique_reference(src, dst, asks, targets)
+    np.testing.assert_array_equal(counts, cref)
+    # arrival-order capping is part of the contract, so the mask must match
+    # EXACTLY (not just as per-graph sets)
+    np.testing.assert_array_equal(take, tref)
+
+
+def test_edge_sets_identical_per_graph():
+    """Set-level equivalence (the Theorem-3-facing property): per graph the
+    kept (src, dst) sets match the np.unique path."""
+    rng = np.random.default_rng(42)
+    src, dst, asks, targets = _random_case(rng, 5, 6, 300)
+    take, counts = dedup.segmented_unique(src, dst, asks, targets, node_bits=6)
+    tref, _ = dedup.host_unique_reference(src, dst, asks, targets)
+    off = 0
+    for g, ask in enumerate(asks):
+        sl = slice(off, off + int(ask))
+        got = set(zip(src[sl][take[sl]], dst[sl][take[sl]]))
+        want = set(zip(src[sl][tref[sl]], dst[sl][tref[sl]]))
+        assert got == want, f"graph {g}"
+        off += int(ask)
+
+
+def test_multikey_fallback_matches_packed():
+    """node_bits too wide for a 63-bit packed key -> 4-operand lax.sort path;
+    both paths must agree with the host reference."""
+    rng = np.random.default_rng(3)
+    asks = np.array([64, 0, 130])
+    total = int(asks.sum())
+    src = rng.integers(0, 50, size=total).astype(np.int32)
+    dst = rng.integers(0, 50, size=total).astype(np.int32)
+    targets = np.array([30, 10, 500])
+    tref, cref = dedup.host_unique_reference(src, dst, asks, targets)
+    for node_bits in (6, 31):  # packed / multikey
+        take, counts = dedup.segmented_unique(
+            src, dst, asks, targets, node_bits=node_bits
+        )
+        np.testing.assert_array_equal(take, tref, err_msg=f"bits={node_bits}")
+        np.testing.assert_array_equal(counts, cref)
+
+
+def test_all_duplicates_keep_one():
+    asks = np.array([100, 50])
+    src = np.concatenate([np.full(100, 3), np.full(50, 1)]).astype(np.int32)
+    dst = np.concatenate([np.full(100, 4), np.full(50, 2)]).astype(np.int32)
+    targets = np.array([10, 10])
+    take, counts = dedup.segmented_unique(src, dst, asks, targets, node_bits=3)
+    np.testing.assert_array_equal(counts, [1, 1])
+    assert take[0] and take[100], "first arrival of each graph must win"
+    assert take.sum() == 2
+
+
+def test_zero_targets_take_nothing():
+    rng = np.random.default_rng(0)
+    asks = np.array([40, 30, 0])
+    src = rng.integers(0, 8, size=70).astype(np.int32)
+    dst = rng.integers(0, 8, size=70).astype(np.int32)
+    take, counts = dedup.segmented_unique(
+        src, dst, asks, np.zeros(3, np.int64), node_bits=3
+    )
+    assert take.sum() == 0
+    np.testing.assert_array_equal(counts, [0, 0, 0])
+
+
+def test_cap_keeps_first_arrivals():
+    """target smaller than the unique count: exactly the first `target`
+    distinct pairs in stream order survive (no value-order bias)."""
+    asks = np.array([6])
+    src = np.array([7, 1, 7, 5, 0, 2], dtype=np.int32)  # 7 dup at index 2
+    dst = np.array([0, 0, 0, 0, 0, 0], dtype=np.int32)
+    take, counts = dedup.segmented_unique(
+        src, dst, asks, np.array([3]), node_bits=3
+    )
+    np.testing.assert_array_equal(take, [True, True, False, True, False, False])
+    np.testing.assert_array_equal(counts, [3])
+
+
+def test_bucket_size_grid():
+    assert dedup.bucket_size(1) == 16
+    assert dedup.bucket_size(17) == 18  # 9 * 2
+    for x in (100, 1000, 12345, 10**6):
+        b = dedup.bucket_size(x)
+        assert b >= x and b <= x * 1.125 + 16
+    assert dedup.bucket_size(100, tile=512) % 512 == 0
+
+
+def test_plan_asks_consumes_full_batch():
+    needs = np.array([100, 0, 55, 7])
+    asks, n = dedup.plan_asks(needs, 1.1)
+    assert int(asks.sum()) == n
+    assert asks[1] == 0  # satisfied graphs draw nothing
+    assert (asks[needs > 0] >= needs[needs > 0]).all()
+    asks2, n2 = dedup.plan_asks(np.zeros(4, np.int64), 1.1)
+    assert n2 == 0 and asks2.sum() == 0

@@ -83,6 +83,63 @@ def test_magm_logprob_against_entrywise_product():
             assert abs(got[i, j] - want) < 1e-4
 
 
+def _random_tables(rng, bsz, width, d):
+    """(B, L) sorted-config tables with sentinel padding + random node ids."""
+    from repro.core.partition import CFG_SENTINEL
+
+    tcfg = np.full((bsz, width), CFG_SENTINEL, np.int32)
+    tnode = np.full((bsz, width), -1, np.int32)
+    for b in range(bsz):
+        m = int(rng.integers(0, min(width, 1 << d) + 1))
+        tcfg[b, :m] = np.sort(
+            rng.choice(1 << d, size=m, replace=False)
+        ).astype(np.int32)
+        tnode[b, :m] = rng.integers(0, 10_000, size=m)
+    return jnp.asarray(tcfg), jnp.asarray(tnode)
+
+
+@pytest.mark.parametrize("d,bsz,width", [(3, 2, 8), (6, 5, 16), (10, 4, 64)])
+def test_quilt_descent_lookup_kernel(d, bsz, width):
+    """Fused descent+lookup kernel == pure-jnp oracle, including membership
+    misses (-1), empty blocks, and sentinel padding."""
+    from repro.kernels.quadrant_descent import quilt_descent_lookup
+
+    rng = np.random.default_rng(d)
+    thetas = _thetas(d)
+    n = 2 * TILE
+    u = jax.random.uniform(jax.random.PRNGKey(d), (n, d))
+    kb = jnp.asarray(rng.integers(0, bsz, size=(n, 1)), jnp.int32)
+    lb = jnp.asarray(rng.integers(0, bsz, size=(n, 1)), jnp.int32)
+    tcfg, tnode = _random_tables(rng, bsz, width, d)
+    got = quilt_descent_lookup(
+        u, _cum(thetas), kb, lb, tcfg, tnode, interpret=True
+    )
+    want = ref.quilt_descent_lookup_ref(
+        u, _cum(thetas), kb[:, 0], lb[:, 0], tcfg, tnode
+    )
+    for g, w, name in zip(got, want, ("scfg", "dcfg", "snode", "dnode")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    # sanity: at least one hit and one miss exercised (width < 2^d misses)
+    if d >= 6:
+        assert (np.asarray(got[2]) == -1).any()
+
+
+def test_quilt_descent_lookup_pallas_wrapper_pads():
+    """ops wrapper: non-TILE-multiple N is padded and sliced back."""
+    d, bsz, width, n = 4, 3, 8, TILE + 37
+    rng = np.random.default_rng(0)
+    thetas = _thetas(d)
+    u = jax.random.uniform(jax.random.PRNGKey(1), (n, d))
+    kb = jnp.asarray(rng.integers(0, bsz, size=n), jnp.int32)
+    lb = jnp.asarray(rng.integers(0, bsz, size=n), jnp.int32)
+    tcfg, tnode = _random_tables(rng, bsz, width, d)
+    got = ops.quilt_descent_lookup_pallas(u, _cum(thetas), kb, lb, tcfg, tnode)
+    want = ref.quilt_descent_lookup_ref(u, _cum(thetas), kb, lb, tcfg, tnode)
+    for g, w in zip(got, want):
+        assert g.shape == (n,)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_bernoulli_tile_rate():
     d, n = 8, 512
     thetas = _thetas(d)

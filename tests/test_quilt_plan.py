@@ -1,0 +1,123 @@
+"""QuiltPlan caching + the device-resident pipeline's dispatch contract.
+
+- plan reuse: repeated quilt_sample calls over the same F must NOT
+  re-partition (cache hit), while a different F must.
+- dispatch count: one quilt_sample issues O(max_rounds) fused device
+  dispatches, NOT O(B^2).
+- backend equivalence: device pipeline vs the PR-1 host path vs the Pallas
+  kernel path agree (distributionally / exactly where deterministic).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import magm, quilt
+
+THETA = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
+
+
+def _attrs(n, d, mu=0.5, seed=0):
+    params = magm.make_params(THETA, mu, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(seed), n, params.mu))
+    return params, F
+
+
+def test_plan_reused_across_keys():
+    params, F = _attrs(128, 7, seed=11)
+    quilt.clear_plan_cache()
+    before = dict(quilt.PLAN_STATS)
+    quilt.quilt_sample(jax.random.PRNGKey(0), params, F)
+    assert quilt.PLAN_STATS["partition_builds"] == before["partition_builds"] + 1
+    mid_hits = quilt.PLAN_STATS["plan_hits"]
+    # same F, different keys: cached plan, no re-partition
+    quilt.quilt_sample(jax.random.PRNGKey(1), params, F)
+    quilt.quilt_sample(jax.random.PRNGKey(2), params, F)
+    assert quilt.PLAN_STATS["partition_builds"] == before["partition_builds"] + 1
+    assert quilt.PLAN_STATS["plan_hits"] >= mid_hits + 2
+    # different F: a fresh partition
+    _, F2 = _attrs(128, 7, seed=12)
+    quilt.quilt_sample(jax.random.PRNGKey(3), params, F2)
+    assert quilt.PLAN_STATS["partition_builds"] == before["partition_builds"] + 2
+
+
+def test_same_theta_different_matrix_shares_nothing_wrong():
+    """Same F under different thetas reuses the partition but rebuilds the
+    theta-dependent plan pieces."""
+    params, F = _attrs(96, 6, seed=5)
+    quilt.clear_plan_cache()
+    quilt.quilt_sample(jax.random.PRNGKey(0), params, F)
+    parts = quilt.PLAN_STATS["partition_builds"]
+    plans = quilt.PLAN_STATS["plan_builds"]
+    params2 = magm.make_params(np.array([[0.2, 0.6], [0.6, 0.9]], np.float32), 0.5, 6)
+    quilt.quilt_sample(jax.random.PRNGKey(0), params2, F)
+    assert quilt.PLAN_STATS["partition_builds"] == parts  # partition cached
+    assert quilt.PLAN_STATS["plan_builds"] == plans + 1  # new cum/moments
+
+
+def test_dispatch_count_is_o_max_rounds_not_b_squared():
+    params, F = _attrs(256, 8, seed=7)
+    plan = quilt.get_quilt_plan(F, params.thetas)
+    assert plan.B >= 3, "need B^2 >> max_rounds for the claim to bite"
+    max_rounds = 8
+    for k, v in quilt.DISPATCH_COUNTERS.items():
+        quilt.DISPATCH_COUNTERS[k] = 0
+    quilt.quilt_sample(jax.random.PRNGKey(1), params, F, max_rounds=max_rounds)
+    total = sum(quilt.DISPATCH_COUNTERS.values())
+    assert 1 <= total <= max_rounds, quilt.DISPATCH_COUNTERS
+    assert total < plan.B**2  # the PR-1 path paid >= B^2 host round-trips
+
+
+def test_device_and_host_backends_agree_statistically():
+    """Same-F edge counts from the device pipeline stay within the
+    test_quilt_stats bounds of the conditional expectation, and match the
+    host backend's mean."""
+    n, d, seeds = 192, 8, 6
+    params, F = _attrs(n, d, seed=3)
+    Q = np.asarray(magm.edge_prob_matrix(jnp.asarray(F), params.thetas))
+    m, v = float(Q.sum()), float((Q * (1 - Q)).sum())
+    counts = {}
+    for backend in ("auto", "host"):
+        counts[backend] = [
+            quilt.quilt_sample(
+                jax.random.PRNGKey(900 + s), params, F, backend=backend
+            ).shape[0]
+            for s in range(seeds)
+        ]
+    sigma_mean = np.sqrt(v / seeds) + 1.0
+    for backend, c in counts.items():
+        assert abs(np.mean(c) - m) < 4 * sigma_mean, (backend, np.mean(c), m)
+
+
+def test_device_edges_are_valid_and_unique():
+    params, F = _attrs(200, 7, seed=9)
+    e = quilt.quilt_sample(jax.random.PRNGKey(4), params, F)
+    assert e.dtype == np.int64 and e.ndim == 2 and e.shape[1] == 2
+    assert e.min(initial=0) >= 0 and e.max(initial=0) < 200
+    flat = e[:, 0] * 200 + e[:, 1]
+    assert np.unique(flat).size == flat.size, "duplicate edges"
+
+
+def test_pallas_kernel_path_matches_jnp_path():
+    """Forcing the fused Pallas lookup kernel (interpret mode) must give
+    EXACTLY the jnp dense-gather edges — same key, same uniforms, same
+    pipeline either side of the lookup."""
+    params, F = _attrs(48, 5, seed=2)
+    e_jnp = quilt.quilt_sample(
+        jax.random.PRNGKey(6), params, F, use_kernel=False, backend="device"
+    )
+    e_ker = quilt.quilt_sample(
+        jax.random.PRNGKey(6), params, F, use_kernel=True, backend="device"
+    )
+    np.testing.assert_array_equal(e_jnp, e_ker)
+
+
+@pytest.mark.parametrize("mu", [0.5, 0.7])
+def test_empty_and_tiny_inputs(mu):
+    params, _ = _attrs(8, 4, mu=mu)
+    e = quilt.quilt_sample(jax.random.PRNGKey(0), params, np.zeros((0, 4), np.int8))
+    assert e.shape == (0, 2)
+    _, F1 = _attrs(1, 4, mu=mu, seed=1)
+    e1, st = quilt.quilt_sample(jax.random.PRNGKey(1), params, F1, return_stats=True)
+    assert st.B == 1 and e1.shape[1] == 2
