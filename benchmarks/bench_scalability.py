@@ -1,5 +1,7 @@
 """Paper Figures 10 & 11: quilting vs naive runtime as n grows, and
-per-edge runtime (quilting should be ~constant per edge)."""
+per-edge runtime (quilting should be ~constant per edge) — plus the
+mesh-sharded quilt_sample rows (shard_map overhead on 1 device, fan-out
+win on many)."""
 
 from __future__ import annotations
 
@@ -8,11 +10,45 @@ import numpy as np
 
 from benchmarks.common import THETA_1, THETA_2, emit, time_call
 from repro.core import magm, naive, quilt
+from repro.launch import mesh as mesh_mod
 
 NAIVE_MAX_D = 11  # the paper's naive scheme dies around 2^18; we cap sooner
 
 
+def run_mesh(d: int = 11) -> None:
+    """quilt_sample unsharded vs through shard_map on this host's devices.
+
+    The edge sets are bit-identical by construction (per-graph key folding),
+    so the row pair isolates pure sharding overhead / win.
+    """
+    n = 2**d
+    params = magm.make_params(THETA_1, 0.5, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu))
+    mesh = mesh_mod.make_sampler_mesh()
+    ndev = int(mesh.devices.size)
+    holder = {}
+
+    def nomesh():
+        holder["e"] = quilt.quilt_sample(jax.random.PRNGKey(50 + d), params, F)
+
+    def meshed():
+        holder["em"] = quilt.quilt_sample(
+            jax.random.PRNGKey(50 + d), params, F, mesh=mesh
+        )
+
+    t0 = time_call(nomesh, repeats=2)
+    t1 = time_call(meshed, repeats=2)
+    exact = bool(np.array_equal(holder["e"], holder["em"]))
+    e = max(holder["e"].shape[0], 1)
+    emit(f"quilt_nomesh_theta1_n{n}", t0, f"edges={e}")
+    emit(
+        f"quilt_mesh{ndev}_theta1_n{n}", t1,
+        f"edges={e};exact_match={exact};overhead={t1 / max(t0, 1e-9):.2f}x",
+    )
+
+
 def run(max_d: int = 13) -> None:
+    run_mesh(d=min(max_d, 11))
     for theta, tname in ((THETA_1, "theta1"), (THETA_2, "theta2")):
         for d in range(8, max_d + 1):
             n = 2**d

@@ -50,6 +50,8 @@ from jax.experimental import enable_x64
 __all__ = [
     "bucket_size",
     "plan_asks",
+    "uniform_ask",
+    "dedup_edges",
     "segmented_unique_mask",
     "segmented_unique",
     "call_x64",
@@ -102,6 +104,50 @@ def plan_asks(
     asks[idx] += q
     asks[idx[:r]] += 1
     return asks, n
+
+
+def uniform_ask(needs: np.ndarray, oversample: float, tile: int = 1) -> int:
+    """One SHARED per-graph slot count covering the largest shortfall.
+
+    The mesh-sharded quilting round gives every graph the same number of
+    candidate slots, so (a) all shards of a ``shard_map`` run the identical
+    program shape and (b) each graph's candidate stream depends only on its
+    own folded key and this count — never on how graphs are laid out across
+    devices.  Returns ``bucket_size(max(needs) * oversample + 16)`` (0 when
+    nothing is needed); per-graph margins are therefore at least as generous
+    as :func:`plan_asks` gives the neediest graph.
+    """
+    needs = np.maximum(np.asarray(needs, dtype=np.int64), 0)
+    top = int(needs.max(initial=0))
+    if top == 0:
+        return 0
+    return bucket_size(int(top * oversample) + 16, tile)
+
+
+def dedup_edges(edges: np.ndarray) -> np.ndarray:
+    """First-occurrence unique rows of an ``(E, 2)`` edge array.
+
+    Host-side convenience mirroring the arrival-order semantics of the device
+    dedup (:func:`segmented_unique_mask`): the FIRST copy of each ``(src,
+    dst)`` pair is kept, in stream order.  Node ids must fit in 31 bits.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.core.dedup import dedup_edges
+    >>> dedup_edges(np.array([[3, 1], [0, 2], [3, 1], [0, 0]]))
+    array([[3, 1],
+           [0, 2],
+           [0, 0]])
+    >>> dedup_edges(np.empty((0, 2))).shape
+    (0, 2)
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.shape[0] == 0:
+        return edges
+    key = (edges[:, 0] << 32) | edges[:, 1]
+    _, first_idx = np.unique(key, return_index=True)
+    return edges[np.sort(first_idx)]
 
 
 def _packed_bits(node_bits: int, num_graphs: int, n: int) -> Tuple[int, int, bool]:

@@ -149,6 +149,21 @@ def kpgm_sample(
     Host-level orchestration of Algorithm 1: draw X ~ N(m, m-v), then draw
     edge candidates in fixed-shape device batches, dedupe on host, and top up
     until X unique edges are collected (the paper's rejection step).
+
+    Examples
+    --------
+    >>> import numpy as np, jax
+    >>> from repro.core import kpgm
+    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+    >>> params = kpgm.make_params(theta, d=6)
+    >>> edges = kpgm.kpgm_sample(jax.random.PRNGKey(0), params)
+    >>> edges.dtype, edges.shape[1]
+    (dtype('int64'), 2)
+    >>> bool((edges >= 0).all()) and bool((edges < params.num_nodes).all())
+    True
+    >>> n = params.num_nodes  # every returned edge is unique
+    >>> int(np.unique(edges[:, 0] * n + edges[:, 1]).size) == len(edges)
+    True
     """
     thetas = params.thetas
     d = params.d

@@ -15,30 +15,44 @@ configuration, so the edge probability is a single scalar P_{lam'_i, lam'_j}).
 The remaining "light" nodes W are quilted with B <= B'.  B' is chosen by
 minimising the cost model T(B') = B'^2 log(n)|E| + (|W|+d)R + dR^2.
 
-Sampling pipeline (device-resident quilting)
---------------------------------------------
+Sampling pipeline (device-resident, mesh-shardable quilting)
+------------------------------------------------------------
 
-``quilt_sample`` runs the whole B^2-block hot path in O(1) device dispatches
-per top-up round instead of O(B^2) host round-trips:
+``quilt_sample`` runs the whole B^2-block hot path in O(max_rounds) device
+dispatches instead of O(B^2) host round-trips, and optionally shards it
+across a device mesh:
 
 1. **Plan** — :func:`get_quilt_plan` builds a :class:`QuiltPlan` ONCE per
    (attribute matrix, thetas) pair and caches it: the Theorem-2 partition,
    the padded per-block sorted-config lookup tables (+ the dense config ->
    node inverse used by the CPU fast path), the cumulative quadrant
    probabilities and the |E| moments, all as device arrays.
-2. **Descent + lookup** — one fused program draws candidates for ALL block
-   pairs at once: quadrant descent produces config ids, which are mapped
-   through the per-block lookup tables on-device (Pallas kernel
+2. **Layout** — every block-pair graph g gets the SAME number of candidate
+   slots per round (dedup.uniform_ask) and its own PRNG key
+   ``fold_in(fold_in(round_key, round), g)``, so graph g's candidate stream
+   depends only on (key, g, round sizes) — never on how graphs are laid out
+   across devices.  This is what makes the sharded and single-device paths
+   bit-identical.
+3. **Descent + lookup + dedup** — one fused program per round draws the
+   candidates for ALL local block pairs: quadrant descent produces config
+   ids, mapped through the per-block lookup tables on-device (Pallas kernel
    ``kernels/quadrant_descent.quilt_descent_lookup`` on TPU, jnp dense-gather
-   fallback on CPU), emitting ``(src_node, dst_node)`` with -1 marking a
-   membership miss — the filter never leaves the device.
-3. **Segmented dedup** — the same program runs the sort-based segmented
-   dedup (core/dedup.py) over ``(graph_id << 2d) | src << d | dst`` packed
-   keys of all B^2 graphs at once, returning a fixed-shape take mask plus
-   per-graph unique counts, so the compiled program caches across calls.
-4. **Host gather** — ONE transfer of the masked node ids materialises the
-   edge list; the rare duplicate-collision shortfall is topped up by the
-   small host rejection loop (same arrival-order semantics as PR 1).
+   fallback on CPU) with -1 marking a membership miss, then the sort-based
+   segmented dedup (core/dedup.py) over ``(graph_id << 2d) | src << d | dst``
+   packed keys returns a fixed-shape take mask + per-graph unique counts.
+4. **Mesh sharding** — with ``mesh=``, the B^2 graphs are placed along the
+   ``graphs`` logical axis (repro.dist.sharding.graph_shard_axes) and step 3
+   runs under ``shard_map``: each device descends + dedups ONLY its chunk of
+   graphs (the streams are iid, Theorem 4), with no collective inside the
+   round — the final host gather of the sharded outputs is the only
+   cross-device step.
+5. **On-device top-up** — a duplicate-collision shortfall (typically <0.1%
+   of edges) triggers another FIXED-SHAPE device round whose candidate
+   stream is [all prior rounds' candidates || fresh draws]: the seen keys
+   ride through the segmented dedup again, so arrival-order semantics are
+   exact and nothing but the tiny per-graph counts ever leaves the device.
+   The PR-1 host rejection loop survives only as a fallback for the
+   pathological case of ``max_rounds`` exhausted device rounds.
 """
 
 from __future__ import annotations
@@ -52,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map as _shard_map
 from repro.core import dedup, kpgm, magm, partition
 from repro.kernels import ops
 
@@ -66,15 +81,6 @@ class QuiltStats(NamedTuple):
     bprime: Optional[int]
 
 
-def _dedupe(edges: np.ndarray) -> np.ndarray:
-    """Unique rows of an (E, 2) int64 edge array."""
-    if edges.size == 0:
-        return edges.reshape(0, 2).astype(np.int64)
-    key = edges[:, 0].astype(np.int64) << 32 | edges[:, 1].astype(np.int64)
-    uniq = np.unique(key)
-    return np.stack([uniq >> 32, uniq & 0xFFFFFFFF], axis=1)
-
-
 # ---------------------------------------------------------------------------
 # QuiltPlan: everything quilt_sample needs, built once per attribute matrix
 # ---------------------------------------------------------------------------
@@ -85,7 +91,26 @@ DENSE_INV_CAP = 1 << 24
 
 
 class QuiltPlan(NamedTuple):
-    """Precomputed device state for quilting one attribute matrix."""
+    """Precomputed device state for quilting one attribute matrix.
+
+    Built (and content-cached) by :func:`get_quilt_plan`: the Theorem-2
+    partition, the padded per-block lookup tables (+ optional dense
+    config -> node inverse), the cumulative quadrant probabilities, and the
+    |E| moments — everything :func:`quilt_sample` needs besides the key.
+
+    Examples
+    --------
+    >>> import numpy as np, jax
+    >>> from repro.core import magm, quilt
+    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+    >>> params = magm.make_params(theta, mu=0.5, d=5)
+    >>> F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), 24, params.mu))
+    >>> plan = quilt.get_quilt_plan(F, params.thetas)
+    >>> plan.n, plan.d, plan.num_graphs == plan.B ** 2
+    (24, 5, True)
+    >>> plan is quilt.get_quilt_plan(F, params.thetas)  # content-cached
+    True
+    """
 
     n: int
     d: int
@@ -182,41 +207,70 @@ def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
 
 
 # ---------------------------------------------------------------------------
-# Device-resident quilting
+# Device-resident quilting (mesh-shardable)
 # ---------------------------------------------------------------------------
 
-# one fused dispatch per top-up round + the final gather; tests assert the
-# total stays O(max_rounds), independent of B^2
-DISPATCH_COUNTERS = {"device_rounds": 0, "host_topup_rounds": 0}
+# one fused dispatch per round (first round + on-device top-ups) + the final
+# gather; tests assert the total stays O(max_rounds), independent of B^2, and
+# that host_topup_rounds stays 0 on the default backend
+DISPATCH_COUNTERS = {
+    "device_rounds": 0,
+    "device_topup_rounds": 0,
+    "host_topup_rounds": 0,
+}
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_candidates", "num_blocks", "use_kernel")
-)
-def _quilt_round(
-    key: jax.Array,
+def _round_body(
+    rkey: jax.Array,
+    gids: jax.Array,
+    targets: jax.Array,
     cum: jax.Array,
     tables,
-    asks: jax.Array,
-    targets: jax.Array,
     *,
-    num_candidates: int,
+    rounds: Tuple[int, ...],
     num_blocks: int,
     use_kernel: bool,
 ):
-    """One fused device round: descent -> block lookup -> segmented dedup.
+    """Per-shard fused quilting round over a chunk of block-pair graphs.
+
+    ``gids``/``targets`` are this shard's GLOBAL graph ids and edge targets
+    (zero-target padding rows emit nothing).  ``rounds`` holds the per-graph
+    slot count of every round so far: candidates for graph g are the
+    concatenation over r of ``uniform(fold_in(fold_in(rkey, r), g),
+    (rounds[r], d))`` — re-descending the earlier rounds is how the top-up
+    carries the seen keys through the segmented dedup with exact
+    arrival-order semantics (one longer iid stream per graph).  Everything
+    depends only on per-graph keys + static sizes, so any sharding of the
+    graph axis yields bit-identical per-graph results.
 
     Returns fixed-shape (scfg, dcfg, snode, dnode, take, counts); call under
     dedup.call_x64.  ``tables`` is (table_cfg, table_node) for the Pallas
-    kernel path or (inv,) for the jnp dense-gather path (CPU)."""
+    kernel path or (inv,) for the jnp dense-gather path (CPU).  No
+    collectives: with shard_map, the caller's gather of the outputs is the
+    only cross-device step.
+    """
     d = cum.shape[0]
-    u = jax.random.uniform(key, (num_candidates, d), dtype=jnp.float32)
-    cum_asks = jnp.cumsum(asks)
-    graph_id = jnp.searchsorted(
-        cum_asks, jnp.arange(num_candidates, dtype=asks.dtype), side="right"
-    ).astype(jnp.int32)
-    kb = graph_id // num_blocks
-    lb = graph_id % num_blocks
+    gc = gids.shape[0]
+    chunks = []
+    for r, ask in enumerate(rounds):
+        kr = jax.random.fold_in(rkey, r)
+        gkeys = jax.vmap(lambda g, k=kr: jax.random.fold_in(k, g))(gids)
+        chunks.append(
+            jax.vmap(
+                lambda k, a=ask: jax.random.uniform(
+                    k, (a, d), dtype=jnp.float32
+                )
+            )(gkeys)
+        )
+    u = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=1)
+    a_tot = u.shape[1]
+    u = u.reshape(gc * a_tot, d)
+    local = (jnp.arange(gc * a_tot, dtype=jnp.int32) // a_tot).astype(
+        jnp.int32
+    )
+    gid = gids[local]
+    kb = gid // num_blocks
+    lb = gid % num_blocks
     if use_kernel:
         table_cfg, table_node = tables
         scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
@@ -228,10 +282,44 @@ def _quilt_round(
         flat = inv.reshape(-1)
         snode = flat[(kb << d) | scfg]
         dnode = flat[(lb << d) | dcfg]
+    cum_asks = jnp.arange(1, gc + 1, dtype=jnp.int32) * a_tot
     take, counts = dedup.segmented_unique_mask(
-        graph_id, scfg, dcfg, cum_asks, targets, node_bits=d
+        local, scfg, dcfg, cum_asks, targets, node_bits=d
     )
     return scfg, dcfg, snode, dnode, take, counts
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_round(
+    mesh,
+    axes: Tuple[str, ...],
+    rounds: Tuple[int, ...],
+    num_blocks: int,
+    use_kernel: bool,
+    num_tables: int,
+):
+    """Jit (and, with a mesh, shard_map) one round program.
+
+    Cached so repeated samples of the same shape reuse the compiled program;
+    keyed by the mesh object, the resolved graph axes and the static sizes.
+    """
+    body = functools.partial(
+        _round_body,
+        rounds=rounds,
+        num_blocks=num_blocks,
+        use_kernel=use_kernel,
+    )
+    if mesh is not None:
+        spec = jax.sharding.PartitionSpec(axes)
+        rep = jax.sharding.PartitionSpec()
+        body = _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(rep, spec, spec, rep, (rep,) * num_tables),
+            out_specs=(spec,) * 6,
+            check_rep=False,
+        )
+    return jax.jit(body)
 
 
 def quilt_sample(
@@ -243,6 +331,7 @@ def quilt_sample(
     oversample: float = 1.05,
     backend: str = "auto",
     use_kernel: Optional[bool] = None,
+    mesh=None,
     return_stats: bool = False,
 ) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
     """Sample a MAGM graph by quilting (Algorithm 2).  Returns (E, 2) int64.
@@ -253,9 +342,32 @@ def quilt_sample(
 
     The default backend runs the device-resident pipeline (module docstring);
     ``backend="host"`` forces the PR-1 reference path (also used automatically
-    when the plan has no dense inverse or the batch exceeds
+    when the plan has no dense inverse or the per-device batch exceeds
     kpgm.DEVICE_MAX_CANDIDATES).  ``use_kernel`` overrides the Pallas-vs-jnp
     lookup choice (defaults to the Pallas kernel on real TPUs only).
+
+    ``mesh`` shards the B^2 block-pair candidate streams along the ``graphs``
+    logical axis (launch.mesh.make_sampler_mesh, or any mesh with a
+    data-parallel axis — see repro.dist.sharding.graph_shard_axes): every
+    device descends + dedups only its own graphs, and the final gather is
+    the only cross-device step.  Per-graph PRNG key folding makes the result
+    BIT-IDENTICAL to the single-device path for the same key, whatever the
+    device count.
+
+    Examples
+    --------
+    >>> import numpy as np, jax
+    >>> from repro.core import magm, quilt
+    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+    >>> params = magm.make_params(theta, mu=0.5, d=5)
+    >>> F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), 24, params.mu))
+    >>> edges = quilt.quilt_sample(jax.random.PRNGKey(1), params, F)
+    >>> edges.dtype, edges.shape[1]
+    (dtype('int64'), 2)
+    >>> bool((edges >= 0).all()) and bool((edges < 24).all())
+    True
+    >>> int(np.unique(edges[:, 0] * 24 + edges[:, 1]).size) == len(edges)
+    True
     """
     F = np.asarray(F)
     if F.size == 0:
@@ -283,10 +395,23 @@ def quilt_sample(
         # no dense inverse (B * 2^d over DENSE_INV_CAP): the sorted-table
         # kernel path is the only device lookup that exists at this size
         use_kernel = True
+
+    from repro.dist import sharding as _dist_sharding
+
+    axes, nshards = _dist_sharding.graph_shard_axes(mesh)
+    if not axes:
+        mesh = None  # no usable graph axis: run the unsharded program
+        nshards = 1
+    g_pad = G + (-G) % nshards
+    ask0 = dedup.uniform_ask(targets, oversample)
+    # the backend decision must be LAYOUT-INVARIANT (G, not g_pad; no
+    # nshards factor) or mesh and no-mesh runs could pick different
+    # samplers near the cap and break the bit-identity contract; meshes
+    # with spare aggregate memory can force backend="device" instead
     use_device = backend == "device" or (
         backend == "auto"
         and (plan.inv is not None or use_kernel)
-        and total * oversample + 16 * G <= kpgm.DEVICE_MAX_CANDIDATES
+        and G * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
     )
     if not use_device:
         return _quilt_sample_host(key, params, plan, return_stats)
@@ -295,39 +420,68 @@ def quilt_sample(
     edges_dst: List[np.ndarray] = []
     counts = np.zeros(G, dtype=np.int64)
     seen_cfg: Optional[List[np.ndarray]] = None
+    outs = None
+    shortfall = targets.copy()
+    key, rkey = jax.random.split(key)
 
     if total > 0:
-        asks, batch = dedup.plan_asks(targets, oversample)
-        key, sub = jax.random.split(key)
+        gids = np.zeros(g_pad, dtype=np.int32)
+        gids[:G] = np.arange(G, dtype=np.int32)
+        tpad = np.zeros(g_pad, dtype=np.int32)
+        tpad[:G] = targets
+        gids_j = jnp.asarray(gids)
+        tpad_j = jnp.asarray(tpad)
         tables = (
             (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
         )
-        scfg, dcfg, snode, dnode, take, cnts = dedup.call_x64(
-            _quilt_round,
-            sub,
-            plan.cum,
-            tables,
-            jnp.asarray(asks, jnp.int32),
-            jnp.asarray(targets, jnp.int32),
-            num_candidates=batch,
-            num_blocks=plan.B,
-            use_kernel=use_kernel,
-        )
-        DISPATCH_COUNTERS["device_rounds"] += 1
+        rounds: Tuple[int, ...] = ()
+        for r in range(max_rounds):
+            ask = dedup.uniform_ask(shortfall, oversample)
+            if ask == 0:
+                break
+            if rounds and G * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
+                # the cumulative stream would outgrow the device budget
+                # (near-saturated targets): let the host fallback finish the
+                # residual instead of OOMing.  Like the backend decision,
+                # this guard is layout-invariant (G * total, no nshards), so
+                # every mesh breaks at the same round with the same state.
+                break
+            # each dispatch re-processes [prior rounds || fresh draws] as one
+            # longer per-graph stream: the seen keys are carried through the
+            # segmented dedup on-device, nothing returns to the host but the
+            # per-graph counts
+            rounds = rounds + (ask,)
+            fn = _compiled_round(
+                mesh, axes, rounds, plan.B, use_kernel, len(tables)
+            )
+            outs = dedup.call_x64(fn, rkey, gids_j, tpad_j, plan.cum, tables)
+            DISPATCH_COUNTERS[
+                "device_rounds" if r == 0 else "device_topup_rounds"
+            ] += 1
+            counts = np.asarray(outs[5]).astype(np.int64)[:G]
+            shortfall = targets - counts
+            if shortfall.max(initial=0) <= 0:
+                break
+
+    if outs is not None:
+        scfg, dcfg, snode, dnode, take, _ = outs
         take_h = np.asarray(take)
         sn = np.asarray(snode)
         dn = np.asarray(dnode)
-        counts = np.asarray(cnts).astype(np.int64)
         keep = take_h & (sn >= 0) & (dn >= 0)
         edges_src.append(sn[keep].astype(np.int64))
         edges_dst.append(dn[keep].astype(np.int64))
-        if (targets - counts).max(initial=0) > 0:
-            # transfer config ids only when a top-up is actually needed
+        if shortfall.max(initial=0) > 0:
+            # pathological: max_rounds device rounds still short — fall back
+            # to the PR-1 host rejection loop for the residual
             flat_taken = (
                 np.asarray(scfg)[take_h].astype(np.int64) * ncfg
                 + np.asarray(dcfg)[take_h].astype(np.int64)
             )
-            seen_cfg = list(np.split(flat_taken, np.cumsum(counts)[:-1]))
+            full_counts = np.asarray(outs[5]).astype(np.int64)
+            seen_cfg = list(
+                np.split(flat_taken, np.cumsum(full_counts)[:-1])
+            )[:G]
 
     if seen_cfg is not None:
         counts = _host_quilt_topup(
@@ -338,7 +492,7 @@ def quilt_sample(
             seen_cfg,
             edges_src,
             edges_dst,
-            max_rounds - 1,
+            max_rounds,
             oversample,
         )
 
@@ -525,9 +679,33 @@ def quilt_sample_fast(
     *,
     bprime: Optional[int] = None,
     seed: int = 0,
+    mesh=None,
     return_stats: bool = False,
 ) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
-    """Section-5 sampler: quilt the light nodes, ER-sample the heavy blocks."""
+    """Section-5 sampler: quilt the light nodes, ER-sample the heavy blocks.
+
+    Configurations occurring more than ``bprime`` times become R "heavy"
+    groups whose block pairs are scalar-p Erdos-Renyi draws (the
+    ball-dropping regime of Moreno et al., arXiv:1202.6001); the remaining
+    light nodes are quilted with :func:`quilt_sample` (which ``mesh``
+    shards across devices, see there).  ``bprime=None`` minimises the
+    paper's cost model T(B') via :func:`choose_bprime`.
+
+    Examples
+    --------
+    >>> import numpy as np, jax
+    >>> from repro.core import magm, quilt
+    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+    >>> params = magm.make_params(theta, mu=0.7, d=5)  # unbalanced mu
+    >>> F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), 48, params.mu))
+    >>> edges, info = quilt.quilt_sample_fast(
+    ...     jax.random.PRNGKey(1), params, F, return_stats=True
+    ... )
+    >>> edges.shape[1], edges.dtype
+    (2, dtype('int64'))
+    >>> info.heavy_groups >= 0 and 0 <= info.light_nodes <= 48
+    True
+    """
     F = np.asarray(F)
     n, d = F.shape
     lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
@@ -552,7 +730,7 @@ def quilt_sample_fast(
     # (1) light x light: quilt the W-subgraph (configs unchanged; B <= B').
     if W.size:
         key, sub = jax.random.split(key)
-        res = quilt_sample(sub, params, F[W], return_stats=True)
+        res = quilt_sample(sub, params, F[W], mesh=mesh, return_stats=True)
         ew, st = res
         stats_b, draws, kp_total = st.B, st.num_kpgm_draws, st.kpgm_edges_total
         if ew.size:
@@ -620,7 +798,7 @@ def quilt_sample_fast(
                 )
 
     out = (
-        _dedupe(np.concatenate(pieces, axis=0))
+        dedup.dedup_edges(np.concatenate(pieces, axis=0))
         if pieces
         else np.zeros((0, 2), dtype=np.int64)
     )

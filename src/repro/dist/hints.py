@@ -25,12 +25,27 @@ from typing import Optional, Tuple
 import jax
 
 # logical name -> candidate mesh axes, major first (greedily truncated from
-# the left until the dim divides the remaining axis-size product)
+# the left until the dim divides the remaining axis-size product).
+# "graphs" carries the quilting sampler's B^2 iid block-pair streams
+# (core/quilt.py): a dedicated "graphs" axis when the mesh has one
+# (launch.mesh.make_sampler_mesh), otherwise any data-parallel axis — the
+# streams have no model-parallel structure.
 _LOGICAL_AXES = {
     "batch": ("pod", "data"),
     "fsdp": ("data",),
     "tp": ("model",),
+    "graphs": ("graphs", "pod", "data", "dev"),
 }
+
+
+def logical_axis_candidates(name: str) -> Tuple[str, ...]:
+    """Candidate mesh axes for one logical role, major first.
+
+    The public lookup for callers that resolve a role themselves (e.g.
+    sharding.graph_shard_axes, which pads the sharded dim instead of using
+    resolve_axes' divisibility guard).  () for unknown names.
+    """
+    return _LOGICAL_AXES.get(name, ())
 
 
 def _find_thread_resources():

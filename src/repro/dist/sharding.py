@@ -19,16 +19,40 @@ resident, not an all-gather per layer.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import hints
 from repro.dist.hints import build_spec
 
 # bf16 weight budget per chip under pure TP; above this, serving keeps FSDP
 _INFERENCE_WEIGHT_BUDGET_BYTES = 4 << 30
+
+
+def graph_shard_axes(mesh) -> Tuple[Tuple[str, ...], int]:
+    """Mesh axes carrying the quilting sampler's ``graphs`` logical role.
+
+    Returns ``(axes, nshards)`` — every candidate axis of the "graphs" role
+    present on ``mesh`` (hints._LOGICAL_AXES order, so a dedicated "graphs"
+    axis wins, then data-parallel axes) and the product of their sizes.
+    ``((), 1)`` when the mesh is None or has no usable axis; the caller pads
+    the B^2 graph list to a multiple of ``nshards``, so no divisibility
+    guard is needed here.
+    """
+    if mesh is None:
+        return (), 1
+    axes = tuple(
+        a
+        for a in hints.logical_axis_candidates("graphs")
+        if a in mesh.axis_names
+    )
+    if not axes:
+        return (), 1
+    return axes, int(math.prod(mesh.shape[a] for a in axes))
 
 
 def _path_names(path) -> Tuple[str, ...]:

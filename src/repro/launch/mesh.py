@@ -22,3 +22,15 @@ def make_host_mesh():
     """Whatever this process actually has (tests / smoke runs): 1D 'data'."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_sampler_mesh(num_devices: int | None = None):
+    """1D ``graphs`` mesh for the quilting sampler's B^2 iid block streams.
+
+    ``core.quilt.quilt_sample(..., mesh=...)`` shards the block-pair
+    candidate streams along this axis (repro.dist.sharding.graph_shard_axes);
+    sampling has no model-parallel structure, so every device contributes
+    pure throughput.  Defaults to all devices of this process.
+    """
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    return jax.make_mesh((n,), ("graphs",))

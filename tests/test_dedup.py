@@ -124,3 +124,26 @@ def test_plan_asks_consumes_full_batch():
     assert (asks[needs > 0] >= needs[needs > 0]).all()
     asks2, n2 = dedup.plan_asks(np.zeros(4, np.int64), 1.1)
     assert n2 == 0 and asks2.sum() == 0
+
+
+def test_uniform_ask_covers_max_need_and_buckets():
+    needs = np.array([100, 0, 55, 7])
+    a = dedup.uniform_ask(needs, 1.05)
+    assert a == dedup.bucket_size(int(100 * 1.05) + 16)
+    assert a >= int(needs.max() * 1.05) + 16
+    # layout-invariant: only the max matters, not the graph count or order
+    assert dedup.uniform_ask(needs[::-1], 1.05) == a
+    assert dedup.uniform_ask(np.array([100]), 1.05) == a
+    assert dedup.uniform_ask(np.zeros(5, np.int64), 1.05) == 0
+    assert dedup.uniform_ask(np.array([-3, 0]), 1.05) == 0
+
+
+def test_dedup_edges_keeps_first_arrivals():
+    edges = np.array([[3, 1], [0, 2], [3, 1], [0, 0], [0, 2], [3, 1]])
+    np.testing.assert_array_equal(
+        dedup.dedup_edges(edges), [[3, 1], [0, 2], [0, 0]]
+    )
+    assert dedup.dedup_edges(np.empty((0, 2))).shape == (0, 2)
+    # already-unique streams come back untouched, in order
+    uniq = np.array([[5, 5], [1, 9], [0, 0]])
+    np.testing.assert_array_equal(dedup.dedup_edges(uniq), uniq)
