@@ -9,7 +9,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import THETA_1, emit, time_call
-from repro.core import magm, quilt
+from repro.api import MAGMSampler, SamplerConfig
+from repro.core import magm
 
 
 def run(log_n: int = 12) -> None:
@@ -19,9 +20,10 @@ def run(log_n: int = 12) -> None:
         F = np.asarray(
             magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
         )
+        sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
         t = time_call(
-            lambda params=params, F=F, d=d: quilt.quilt_sample_fast(
-                jax.random.PRNGKey(300 + d), params, F, seed=d
+            lambda sampler=sampler, d=d: sampler.sample(
+                jax.random.PRNGKey(300 + d)
             ),
             repeats=1,
         )

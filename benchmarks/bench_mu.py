@@ -7,7 +7,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import THETA_1, THETA_2, emit, time_call
-from repro.core import magm, quilt
+from repro.api import MAGMSampler, SamplerConfig
+from repro.core import magm
 
 
 def _t(theta, mu, d) -> float:
@@ -16,10 +17,9 @@ def _t(theta, mu, d) -> float:
     F = np.asarray(
         magm.sample_attributes(jax.random.PRNGKey(int(mu * 100)), n, params.mu)
     )
+    sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
     return time_call(
-        lambda: quilt.quilt_sample_fast(
-            jax.random.PRNGKey(d), params, F, seed=int(mu * 10)
-        ),
+        lambda: sampler.sample(jax.random.PRNGKey(d)),
         repeats=1,
     )
 

@@ -7,7 +7,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import THETA_1, emit, time_call
-from repro.core import magm, partition, quilt
+from repro.api import MAGMSampler, SamplerConfig
+from repro.core import magm, partition
 
 # timing the full quilt above this d would need multi-GB candidate buffers
 # on a CPU host; larger n keep the (cheap) partition-size study only
@@ -25,9 +26,10 @@ def run(max_d: int = 16) -> None:
         )
         lam = np.asarray(magm.configs_from_attributes(F))
         b = partition.min_partition_size(lam)
+        sampler = MAGMSampler(SamplerConfig(params=params, F=F))
         t = time_call(
-            lambda F=F, params=params, d=d: quilt.quilt_sample(
-                jax.random.PRNGKey(5000 + d), params, F
+            lambda sampler=sampler, d=d: sampler.sample(
+                jax.random.PRNGKey(5000 + d)
             ),
         )
         emit(

@@ -6,7 +6,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import THETA_1, THETA_2, emit
-from repro.core import magm, quilt, stats
+from repro.api import MAGMSampler, SamplerConfig
+from repro.core import magm, stats
 
 
 def run(max_d: int = 13) -> None:
@@ -18,9 +19,8 @@ def run(max_d: int = 13) -> None:
             F = np.asarray(
                 magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
             )
-            edges = quilt.quilt_sample_fast(
-                jax.random.PRNGKey(50 + d), params, F, seed=d
-            )
+            sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
+            edges = sampler.sample(jax.random.PRNGKey(50 + d)).edges
             scc = stats.largest_scc_fraction(edges, n)
             ns.append(n)
             es.append(max(edges.shape[0], 1))

@@ -1,22 +1,75 @@
 """Paper Figures 10 & 11: quilting vs naive runtime as n grows, and
 per-edge runtime (quilting should be ~constant per edge) — plus the
-mesh-sharded quilt_sample rows (shard_map overhead on 1 device, fan-out
-win on many)."""
+mesh-sharded row pair (shard_map overhead on 1 device, fan-out win on
+many) and the session-reuse row pair (cold free-function call vs warm
+MAGMSampler.sample, the PR-4 amortization claim)."""
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import numpy as np
 
 from benchmarks.common import THETA_1, THETA_2, emit, time_call
+from repro.api import MAGMSampler, SamplerConfig
 from repro.core import magm, naive, quilt
-from repro.launch import mesh as mesh_mod
 
 NAIVE_MAX_D = 11  # the paper's naive scheme dies around 2^18; we cap sooner
 
 
+# serving-regime initiator for the reuse rows: sparse enough that per-call
+# FIXED costs (F digest, partition, plan assembly, bprime search, heavy
+# probability matrices) are visible next to the |E|-proportional rounds —
+# the high-QPS many-graphs-per-config workload sessions exist for.  At
+# fig10-scale |E| both paths converge on the sampling work itself (the
+# session then only saves the ~ms plan rebuild), which is why the reuse
+# claim is pinned in this regime.
+THETA_REUSE = np.array([[0.10, 0.45], [0.45, 0.65]], dtype=np.float32)
+
+
+def run_reuse(d: int = 12) -> None:
+    """Cold free-function call vs warm session sample, same key.
+
+    The cold rows are the legacy contract: every call digests F and
+    rebuilds the partition + plan (+ the Section-5 split state on the fast
+    path; the global cache is cleared each rep to model a fresh caller /
+    evicted entry).  The warm rows are the session contract: all of that
+    was built once at construction, so per-call work is only the sampling
+    itself.  Cold and warm emit bit-identical edges for the same key."""
+    n = 2**d
+    params = magm.make_params(THETA_REUSE, 0.5, d)
+    F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu))
+    key = jax.random.PRNGKey(90 + d)
+    for split, tag in ((False, ""), (True, "split_")):
+        holder = {}
+
+        def cold(split=split, holder=holder):
+            quilt.clear_plan_cache()
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                fn = quilt.quilt_sample_fast if split else quilt.quilt_sample
+                holder["c"] = fn(key, params, F)
+
+        session = MAGMSampler(SamplerConfig(params=params, F=F, split=split))
+
+        def warm(session=session, holder=holder):
+            holder["w"] = session.sample(key).edges
+
+        t_cold = time_call(cold, repeats=3)
+        t_warm = time_call(warm, repeats=3)
+        exact = bool(np.array_equal(holder["c"], holder["w"]))
+        e = max(holder["w"].shape[0], 1)
+        emit(f"reuse_{tag}cold_free_fn_n{n}", t_cold, f"edges={e}")
+        emit(
+            f"reuse_{tag}warm_session_n{n}", t_warm,
+            f"edges={e};exact_match={exact};"
+            f"amortization={t_cold / max(t_warm, 1e-9):.2f}x",
+        )
+
+
 def run_mesh(d: int = 11) -> None:
-    """quilt_sample unsharded vs through shard_map on this host's devices.
+    """Session sampling unsharded vs through shard_map on this host's devices.
 
     The edge sets are bit-identical by construction (per-graph key folding),
     so the row pair isolates pure sharding overhead / win.
@@ -24,17 +77,18 @@ def run_mesh(d: int = 11) -> None:
     n = 2**d
     params = magm.make_params(THETA_1, 0.5, d)
     F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu))
-    mesh = mesh_mod.make_sampler_mesh()
-    ndev = int(mesh.devices.size)
+    config = SamplerConfig(params=params, F=F)
+    nomesh_s = MAGMSampler(config)
+    meshed_s = MAGMSampler(config.replace(mesh="auto"))
+    ndev = int(meshed_s.mesh.devices.size)
+    key = jax.random.PRNGKey(50 + d)
     holder = {}
 
     def nomesh():
-        holder["e"] = quilt.quilt_sample(jax.random.PRNGKey(50 + d), params, F)
+        holder["e"] = nomesh_s.sample(key).edges
 
     def meshed():
-        holder["em"] = quilt.quilt_sample(
-            jax.random.PRNGKey(50 + d), params, F, mesh=mesh
-        )
+        holder["em"] = meshed_s.sample(key).edges
 
     t0 = time_call(nomesh, repeats=2)
     t1 = time_call(meshed, repeats=2)
@@ -49,6 +103,7 @@ def run_mesh(d: int = 11) -> None:
 
 def run(max_d: int = 13) -> None:
     run_mesh(d=min(max_d, 11))
+    run_reuse(d=min(max_d, 12))
     for theta, tname in ((THETA_1, "theta1"), (THETA_2, "theta2")):
         for d in range(8, max_d + 1):
             n = 2**d
@@ -56,12 +111,13 @@ def run(max_d: int = 13) -> None:
             F = np.asarray(
                 magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
             )
+            sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
             holder = {}
 
-            def quilted(F=F, params=params, d=d):
-                holder["edges"] = quilt.quilt_sample_fast(
-                    jax.random.PRNGKey(1000 + d), params, F, seed=d
-                )
+            def quilted(sampler=sampler, d=d):
+                holder["edges"] = sampler.sample(
+                    jax.random.PRNGKey(1000 + d)
+                ).edges
 
             t_q = time_call(quilted, repeats=1)
             e = max(holder["edges"].shape[0], 1)

@@ -1,12 +1,15 @@
-"""Multi-device MAGM quilting: shard the B^2 block-pair streams over a mesh.
+"""Multi-device MAGM quilting through the session facade.
 
     PYTHONPATH=src python examples/distributed_sampling.py
 
-The quilting candidate streams are iid (Theorem 4), so ``quilt_sample``
-places them along the ``graphs`` mesh axis: every device runs the fused
-descent -> block lookup -> segmented dedup on its own chunk of graphs, and
-the final gather is the only cross-device step.  Per-graph PRNG key folding
-makes the edge set BIT-IDENTICAL to the single-device run — verified below.
+One SamplerConfig flows end-to-end: the MAGMSampler session resolves it
+(mesh="auto" places the B^2 block-pair streams along the ``graphs`` axis)
+and every device runs the fused descent -> block lookup -> segmented dedup
+on its own chunk of graphs; the final gather is the only cross-device step.
+Per-graph PRNG key folding makes the edge set BIT-IDENTICAL to the
+single-device run, and the streaming emission yields the same edges in
+fixed-size chunks without materializing the full list — both verified
+below.
 
 On a pod the identical code spreads over all chips; on a CPU container we
 force 4 virtual host devices (XLA_FLAGS, set before jax initialises) so the
@@ -28,33 +31,43 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.api import MAGMSampler, SamplerConfig  # noqa: E402
 from repro.core import magm, quilt  # noqa: E402
-from repro.launch import mesh as mesh_mod  # noqa: E402
 
 THETA = np.array([[0.15, 0.70], [0.70, 0.85]], dtype=np.float32)
 D = 12
 N = 2**D
 
-params = magm.make_params(THETA, mu=0.5, d=D)
-F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), N, params.mu))
-mesh = mesh_mod.make_sampler_mesh()
+config = SamplerConfig(
+    params=magm.make_params(THETA, mu=0.5, d=D),
+    num_nodes=N,
+    attribute_key=jax.random.PRNGKey(0),
+)
 
 # single-device reference (same key): the mesh run must reproduce it exactly
-edges_ref = quilt.quilt_sample(jax.random.PRNGKey(1), params, F)
+key = jax.random.PRNGKey(1)
+edges_ref = MAGMSampler(config).sample(key).edges
 
+sampler = MAGMSampler(config.replace(mesh="auto"))
 t0 = time.perf_counter()
-edges, info = quilt.quilt_sample(
-    jax.random.PRNGKey(1), params, F, mesh=mesh, return_stats=True
-)
+gs = sampler.sample(key)
 dt = time.perf_counter() - t0
 
-assert np.array_equal(edges, edges_ref), "mesh path diverged from reference"
+assert np.array_equal(gs.edges, edges_ref), "mesh path diverged from reference"
 assert quilt.DISPATCH_COUNTERS["host_topup_rounds"] == 0
 
-print(f"mesh           : {mesh}")
-print(f"nodes          : {N}")
+# streaming emission: fixed-size chunks, never the full list at once,
+# bit-identical concatenation
+chunks = list(sampler.sample_stream(key, chunk_edges=1 << 14))
+assert all(c.shape[0] == 1 << 14 for c in chunks[:-1])
+assert np.array_equal(np.concatenate(chunks), edges_ref)
+
+info = gs.stats
+print(f"mesh           : {sampler.mesh}")
+print(f"nodes          : {gs.n}")
 print(f"partition B    : {info.B}  ({info.num_kpgm_draws} block-pair graphs)")
-print(f"edges sampled  : {edges.shape[0]}")
-print(f"expected edges : {magm.expected_edges(params, N):.0f}")
-print(f"single-device == {mesh.devices.size}-device edge set: exact")
-print(f"wall time      : {dt:.2f}s ({edges.shape[0] / dt:.0f} edges/s)")
+print(f"edges sampled  : {gs.num_edges}")
+print(f"expected edges : {magm.expected_edges(config.params, N):.0f}")
+print(f"single-device == {sampler.mesh.devices.size}-device edge set: exact")
+print(f"stream chunks  : {len(chunks)} x {1 << 14} (concat exact)")
+print(f"wall time      : {dt:.2f}s ({gs.num_edges / dt:.0f} edges/s)")

@@ -1,0 +1,30 @@
+"""repro.api — the public sampling surface.
+
+One config, two sessions, one result type:
+
+- :class:`SamplerConfig` — frozen description of WHAT to sample and HOW
+  (params, attribute source, backend, mesh, kernel toggle, rejection
+  policy, dtype).
+- :class:`MAGMSampler` / :class:`KPGMSampler` — sessions that resolve a
+  config into owned device state (QuiltPlan, mesh placement, key stream)
+  once, then amortize it across ``.sample()`` / ``.sample_stream()`` /
+  ``.sample_batch()`` calls.
+- :class:`GraphSample` — edges + n + stats + provenance key.
+
+The legacy free functions (``quilt_sample``, ``quilt_sample_fast``,
+``kpgm_sample``) survive as deprecation shims that delegate here and are
+pinned bit-identical by test.  Migration table: docs/API.md.
+"""
+
+from repro.api.config import SamplerConfig
+from repro.api.result import GraphSample, KPGMStats, QuiltStats
+from repro.api.session import KPGMSampler, MAGMSampler
+
+__all__ = [
+    "SamplerConfig",
+    "GraphSample",
+    "KPGMStats",
+    "QuiltStats",
+    "MAGMSampler",
+    "KPGMSampler",
+]

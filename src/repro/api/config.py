@@ -1,0 +1,110 @@
+"""SamplerConfig: the one frozen value describing how to sample.
+
+Everything the three legacy free functions took as divergent keyword
+soups — params, attribute source, backend, mesh, kernel toggle, the
+oversample / max_rounds / bprime policy, output dtype — lives in one
+immutable dataclass.  A config is pure data (no device state, no jax
+initialisation at construction); sessions (`repro.api.MAGMSampler`,
+`repro.api.KPGMSampler`) resolve it into owned device state exactly once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+VALID_BACKENDS = ("auto", "device", "host")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SamplerConfig:
+    """Immutable sampler description consumed by the session objects.
+
+    Parameters
+    ----------
+    params:
+        ``magm.MAGMParams`` (for :class:`repro.api.MAGMSampler`) or
+        ``kpgm.KPGMParams`` (for :class:`repro.api.KPGMSampler`).
+    F / num_nodes / attribute_key:
+        The attribute source (MAGM only): an explicit (n, d) matrix wins;
+        otherwise ``num_nodes`` rows are drawn from Bernoulli(mu) with
+        ``attribute_key`` (default PRNGKey(0)) at session build time.
+    backend:
+        "auto" (device pipeline when eligible, host fallback), "device",
+        or "host" (the PR-1 reference path).
+    mesh:
+        None (unsharded), "auto" (1D ``graphs`` mesh over all local
+        devices), "host" (this process's data mesh), or a jax Mesh.
+        Resolved once at session build; results are bit-identical across
+        any device count for the same key.
+    use_kernel:
+        Pallas-vs-jnp block lookup override (None = Pallas on real TPU).
+    oversample / max_rounds:
+        Candidate over-draw factor and device round budget of the
+        rejection loop.
+    bprime:
+        Section-5 heavy-config threshold (None = cost-model optimum);
+        only meaningful with ``split=True``.
+    split:
+        Use the Section-5 split sampler (heavy configs as ER blocks,
+        light nodes quilted) instead of the pure quilt.
+    dtype:
+        Integer dtype of emitted edge arrays (checked against n at
+        session build).
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.api import SamplerConfig
+    >>> from repro.core import magm
+    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+    >>> cfg = SamplerConfig(
+    ...     params=magm.make_params(theta, mu=0.5, d=5), num_nodes=32
+    ... )
+    >>> cfg.backend, cfg.split
+    ('auto', False)
+    >>> cfg.replace(backend="host").backend  # configs are immutable values
+    'host'
+    >>> SamplerConfig(params=cfg.params, backend="gpu")
+    Traceback (most recent call last):
+        ...
+    ValueError: backend must be one of ('auto', 'device', 'host'), got 'gpu'
+    """
+
+    params: Any
+    F: Optional[np.ndarray] = None
+    num_nodes: Optional[int] = None
+    attribute_key: Optional[Any] = None
+    backend: str = "auto"
+    mesh: Any = None
+    use_kernel: Optional[bool] = None
+    oversample: float = 1.05
+    max_rounds: int = 8
+    bprime: Optional[int] = None
+    split: bool = False
+    dtype: Any = np.int64
+
+    def __post_init__(self) -> None:
+        if self.backend not in VALID_BACKENDS:
+            raise ValueError(
+                f"backend must be one of {VALID_BACKENDS}, "
+                f"got {self.backend!r}"
+            )
+        if not self.oversample >= 1.0:
+            raise ValueError(
+                f"oversample must be >= 1.0, got {self.oversample}"
+            )
+        if int(self.max_rounds) < 1:
+            raise ValueError(
+                f"max_rounds must be >= 1, got {self.max_rounds}"
+            )
+        if np.dtype(self.dtype).kind not in "iu":
+            raise ValueError(
+                f"dtype must be an integer dtype, got {self.dtype!r}"
+            )
+
+    def replace(self, **changes) -> "SamplerConfig":
+        """A new config with ``changes`` applied (configs are immutable)."""
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,59 @@
+"""GraphSample: the one result type of every sampling entry point.
+
+Replaces the ``np.ndarray | Tuple[np.ndarray, QuiltStats]`` union returns
+of the legacy free functions: stats are always attached, and the sample
+carries its provenance (the exact PRNG key consumed), so a result is
+reproducible from its own fields.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.quilt import QuiltStats
+
+__all__ = ["GraphSample", "KPGMStats", "QuiltStats"]
+
+
+class KPGMStats(NamedTuple):
+    """Per-draw bookkeeping of a KPGM session sample."""
+
+    num_nodes: int  # 2^d config/node space
+    target_edges: int  # the X ~ N(m, m - v) draw (or num_edges override)
+    sampled_edges: int  # unique edges actually emitted
+
+
+class GraphSample(NamedTuple):
+    """One sampled graph: edges + metadata + provenance.
+
+    ``edges`` is the (E, 2) array in the config's dtype; ``n`` the node
+    count; ``stats`` a :class:`QuiltStats` (MAGM) or :class:`KPGMStats`
+    (KPGM, None on the host fallback); ``key`` the exact PRNG key this
+    sample consumed — when set, re-sampling with it reproduces the edges
+    bit-for-bit on any device layout.  Members of a FUSED
+    ``sample_batch`` carry ``key=None``: they share one device run, so no
+    single-sample key reproduces them.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.api.result import GraphSample
+    >>> gs = GraphSample(np.array([[0, 1], [2, 0]]), n=3, stats=None, key=None)
+    >>> gs.num_edges, gs.density
+    (2, 0.2222222222222222)
+    """
+
+    edges: np.ndarray
+    n: int
+    stats: Optional[Any]
+    key: Optional[Any]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def density(self) -> float:
+        return self.num_edges / float(max(self.n, 1)) ** 2

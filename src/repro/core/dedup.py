@@ -52,6 +52,8 @@ __all__ = [
     "plan_asks",
     "uniform_ask",
     "dedup_edges",
+    "rechunk_edges",
+    "iter_edge_chunks",
     "segmented_unique_mask",
     "segmented_unique",
     "call_x64",
@@ -148,6 +150,73 @@ def dedup_edges(edges: np.ndarray) -> np.ndarray:
     key = (edges[:, 0] << 32) | edges[:, 1]
     _, first_idx = np.unique(key, return_index=True)
     return edges[np.sort(first_idx)]
+
+
+def rechunk_edges(pieces, chunk_edges: int):
+    """Re-chunk a stream of ``(E_i, 2)`` edge pieces into fixed-size chunks.
+
+    Yields ``(chunk_edges, 2)`` int64 arrays; only the final chunk may be
+    shorter.  Empty pieces are skipped; at most one chunk is buffered, so
+    the full edge list is never materialized.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.core.dedup import rechunk_edges
+    >>> pieces = [np.arange(6).reshape(3, 2), np.arange(4).reshape(2, 2)]
+    >>> [c.shape for c in rechunk_edges(pieces, 2)]
+    [(2, 2), (2, 2), (1, 2)]
+    >>> np.concatenate(list(rechunk_edges(pieces, 4)), axis=0).shape
+    (5, 2)
+    """
+    chunk_edges = int(chunk_edges)
+    if chunk_edges <= 0:
+        raise ValueError(f"chunk_edges must be positive, got {chunk_edges}")
+    buf: list = []
+    have = 0
+    for piece in pieces:
+        p = np.asarray(piece, dtype=np.int64).reshape(-1, 2)
+        while p.shape[0]:
+            take = min(chunk_edges - have, p.shape[0])
+            buf.append(p[:take])
+            have += take
+            p = p[take:]
+            if have == chunk_edges:
+                yield np.concatenate(buf, axis=0)
+                buf, have = [], 0
+    if have:
+        yield np.concatenate(buf, axis=0)
+
+
+def iter_edge_chunks(
+    src, dst, keep: np.ndarray, chunk_edges: int, tail=()
+):
+    """Stream the kept ``(src, dst)`` rows of a candidate buffer in chunks.
+
+    The chunked-emission hook of the device quilting pipeline
+    (``repro.api.MAGMSampler.sample_stream``): ``src``/``dst`` are the
+    fixed-shape per-round candidate buffers (device or host arrays) and
+    ``keep`` the host-side boolean take mask.  The buffers are walked in
+    windows — each window is sliced on device and only its kept rows reach
+    the host — so at no point does the full ``(E, 2)`` edge list
+    materialize.  ``tail`` pieces (host top-up edges) are appended after the
+    device edges, matching the concatenated-array emission order exactly.
+    Yields ``(chunk_edges, 2)`` int64 arrays (final chunk may be shorter).
+    """
+
+    def pieces():
+        window = max(int(chunk_edges), 1 << 15)
+        for lo in range(0, keep.shape[0], window):
+            k = keep[lo : lo + window]
+            if not k.any():
+                continue
+            s = np.asarray(src[lo : lo + window])[k]
+            d = np.asarray(dst[lo : lo + window])[k]
+            yield np.stack([s, d], axis=1)
+        for t in tail:
+            yield t
+
+    return rechunk_edges(pieces(), chunk_edges)
 
 
 def _packed_bits(node_bits: int, num_graphs: int, n: int) -> Tuple[int, int, bool]:

@@ -136,7 +136,7 @@ def sample_edge_batch(
     return _descend(u, cum)
 
 
-def kpgm_sample(
+def _kpgm_sample_host(
     key: jax.Array,
     params: KPGMParams,
     *,
@@ -144,27 +144,11 @@ def kpgm_sample(
     oversample: float = 1.05,
     num_edges: Optional[int] = None,
 ) -> np.ndarray:
-    """Sample a KPGM graph; returns unique (src, dst) int64 array of shape (E, 2).
-
-    Host-level orchestration of Algorithm 1: draw X ~ N(m, m-v), then draw
-    edge candidates in fixed-shape device batches, dedupe on host, and top up
-    until X unique edges are collected (the paper's rejection step).
-
-    Examples
-    --------
-    >>> import numpy as np, jax
-    >>> from repro.core import kpgm
-    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
-    >>> params = kpgm.make_params(theta, d=6)
-    >>> edges = kpgm.kpgm_sample(jax.random.PRNGKey(0), params)
-    >>> edges.dtype, edges.shape[1]
-    (dtype('int64'), 2)
-    >>> bool((edges >= 0).all()) and bool((edges < params.num_nodes).all())
-    True
-    >>> n = params.num_nodes  # every returned edge is unique
-    >>> int(np.unique(edges[:, 0] * n + edges[:, 1]).size) == len(edges)
-    True
-    """
+    """Host-level orchestration of Algorithm 1 (the reference path): draw
+    X ~ N(m, m-v), then draw edge candidates in fixed-shape device batches,
+    dedupe on host, and top up until X unique edges are collected (the
+    paper's rejection step).  Used by ``repro.api.KPGMSampler`` for
+    ``backend="host"`` and for d too large for the device plan."""
     thetas = params.thetas
     d = params.d
     n = params.num_nodes
@@ -199,6 +183,49 @@ def kpgm_sample(
         seen = np.concatenate([seen, fresh])
     seen = seen[:target] if seen.size > target else seen
     return np.stack([seen // n, seen % n], axis=1)
+
+
+def kpgm_sample(
+    key: jax.Array,
+    params: KPGMParams,
+    *,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    num_edges: Optional[int] = None,
+    backend: str = "auto",
+    mesh=None,
+) -> np.ndarray:
+    """DEPRECATED shim over ``repro.api.KPGMSampler`` — sample a KPGM graph.
+
+    Returns the unique (src, dst) int64 array of shape (E, 2).  Now has the
+    same ``backend=``/``mesh=`` surface as the quilting samplers: the
+    session layer runs the draw as the trivial B = 1 quilt (identity config
+    -> node lookup), so the fused device rounds, on-device top-up and the
+    bit-identical ``mesh=`` sharding all apply.  Pinned bit-identical to
+    ``KPGMSampler(SamplerConfig(params=params, ...)).sample(key)`` by test.
+    Sessions additionally amortize the identity plan across calls — this
+    shim rebuilds it every time.
+    """
+    import warnings
+
+    warnings.warn(
+        "kpgm_sample is deprecated; use repro.api.KPGMSampler (see "
+        "docs/API.md for the migration table)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro import api
+
+    sampler = api.KPGMSampler(
+        api.SamplerConfig(
+            params=params,
+            backend=backend,
+            mesh=mesh,
+            max_rounds=max_rounds,
+            oversample=oversample,
+        )
+    )
+    return sampler.sample(key, num_edges=num_edges).edges
 
 
 @functools.partial(jax.jit, static_argnames=("num_candidates",))

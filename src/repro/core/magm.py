@@ -24,7 +24,7 @@ per-entry d-fold product into MXU work (kernels/magm_logprob.py tiles it).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,40 @@ def sample_attributes(key: jax.Array, n: int, mu: jax.Array) -> jax.Array:
     d = mu.shape[0]
     u = jax.random.uniform(key, (n, d))
     return (u < mu[None, :]).astype(jnp.int8)
+
+
+def resolve_attributes(
+    params: MAGMParams,
+    F=None,
+    *,
+    num_nodes: Optional[int] = None,
+    attribute_key: Optional[jax.Array] = None,
+) -> np.ndarray:
+    """Resolve a sampler config's attribute source to a concrete (n, d) F.
+
+    An explicit ``F`` (observed attributes) wins and is shape-checked
+    against ``params.d``; otherwise ``num_nodes`` rows are drawn from
+    Bernoulli(mu) with ``attribute_key`` (so the same config always
+    resolves to the same matrix).  Used by ``repro.api.MAGMSampler``.
+    """
+    if F is not None:
+        F = np.asarray(F)
+        if F.ndim != 2 or (F.size and F.shape[1] != params.d):
+            raise ValueError(
+                f"F must be (n, {params.d}), got shape {F.shape}"
+            )
+        return F
+    if num_nodes is None:
+        raise ValueError(
+            "attribute source unspecified: pass F= or num_nodes= "
+            "(optionally with attribute_key=)"
+        )
+    key = (
+        attribute_key
+        if attribute_key is not None
+        else jax.random.PRNGKey(0)
+    )
+    return np.asarray(sample_attributes(key, int(num_nodes), params.mu))
 
 
 def configs_from_attributes(F: jax.Array) -> jax.Array:

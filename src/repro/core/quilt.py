@@ -53,12 +53,23 @@ across a device mesh:
    exact and nothing but the tiny per-graph counts ever leaves the device.
    The PR-1 host rejection loop survives only as a fallback for the
    pathological case of ``max_rounds`` exhausted device rounds.
+
+Public surface
+--------------
+
+The engine here (:func:`quilt_run` over a :class:`QuiltPlan`,
+:func:`split_run` over a :class:`SplitPlan`) is consumed by the session
+facade ``repro.api`` (MAGMSampler / KPGMSampler), which owns its plan,
+mesh placement and key stream across samples.  The module-level free
+functions :func:`quilt_sample` / :func:`quilt_sample_fast` remain as
+deprecated shims pinned bit-identical to the sessions; see docs/API.md.
 """
 
 from __future__ import annotations
 
 import functools
 import hashlib
+import warnings
 from collections import OrderedDict
 from typing import List, NamedTuple, Optional, Tuple
 
@@ -132,12 +143,32 @@ class QuiltPlan(NamedTuple):
 PLAN_STATS = {"partition_builds": 0, "plan_builds": 0, "plan_hits": 0}
 _PART_CACHE: "OrderedDict" = OrderedDict()
 _PLAN_CACHE: "OrderedDict" = OrderedDict()
+_KPGM_PLAN_CACHE: "OrderedDict" = OrderedDict()
 _CACHE_MAX = 8
 
 
 def clear_plan_cache() -> None:
+    """Clear the content-keyed plan/partition caches of the SHIM path.
+
+    Session objects (``repro.api.MAGMSampler`` / ``KPGMSampler``) own their
+    :class:`QuiltPlan` directly (:func:`build_quilt_plan` bypasses these
+    caches entirely), so live sessions are unaffected by this call — the
+    global cache's only remaining role is amortizing repeated calls of the
+    deprecated free-function shims (:func:`quilt_sample`,
+    :func:`quilt_sample_fast`).
+    """
     _PART_CACHE.clear()
     _PLAN_CACHE.clear()
+    _KPGM_PLAN_CACHE.clear()
+
+
+def _warn_shim(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see docs/API.md for the migration"
+        " table)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def _digest(a: np.ndarray):
@@ -152,39 +183,23 @@ def _cache_put(cache: OrderedDict, key, value) -> None:
         cache.popitem(last=False)
 
 
-def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
-    """Build (or fetch) the QuiltPlan for an (F, thetas) pair.
+def _partition_state(F: np.ndarray, d: int):
+    """Partition + device-lookup structures for one attribute matrix."""
+    lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
+    part = partition.build_partition(lam)
+    PLAN_STATS["partition_builds"] += 1
+    tables = partition.padded_lookup_tables(part) if part.B else None
+    inv_np = (
+        partition.dense_inverse(part, d)
+        if part.B and part.B * (1 << d) <= DENSE_INV_CAP
+        else None
+    )
+    return part, tables, inv_np
 
-    Keyed by content: repeated samples over the same attribute matrix reuse
-    the cached partition + device tables (no re-partition), and the same F
-    under new thetas only re-derives the theta-dependent pieces.
-    """
-    F = np.asarray(F)
-    th = np.asarray(thetas)
-    fkey = _digest(F)
-    tkey = _digest(th)
-    plan = _PLAN_CACHE.get((fkey, tkey))
-    if plan is not None:
-        PLAN_STATS["plan_hits"] += 1
-        _PLAN_CACHE.move_to_end((fkey, tkey))
-        return plan
 
+def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
+    part, tables, inv_np = part_state
     n, d = F.shape
-    cached_part = _PART_CACHE.get(fkey)
-    if cached_part is None:
-        lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
-        part = partition.build_partition(lam)
-        PLAN_STATS["partition_builds"] += 1
-        tables = partition.padded_lookup_tables(part) if part.B else None
-        inv_np = (
-            partition.dense_inverse(part, d)
-            if part.B and part.B * (1 << d) <= DENSE_INV_CAP
-            else None
-        )
-        cached_part = (part, tables, inv_np)
-        _cache_put(_PART_CACHE, fkey, cached_part)
-    part, tables, inv_np = cached_part
-
     th_dev = jnp.asarray(th)
     cum = kpgm._level_cumprobs(th_dev)
     m, v = kpgm.edge_moments(th_dev)
@@ -202,6 +217,75 @@ def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
         std_edges=float(jnp.sqrt(jnp.maximum(m - v, 0.0))),
     )
     PLAN_STATS["plan_builds"] += 1
+    return plan
+
+
+def build_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
+    """Build a QuiltPlan OUTSIDE the global cache.
+
+    The session path (``repro.api``): the caller owns the returned plan for
+    its whole lifetime, so no content digest is ever computed and
+    :func:`clear_plan_cache` cannot evict it.
+    """
+    F = np.asarray(F)
+    th = np.asarray(thetas)
+    return _assemble_plan(F, th, _partition_state(F, F.shape[1]))
+
+
+def build_kpgm_plan(thetas: jax.Array) -> QuiltPlan:
+    """Identity-partition plan: one block mapping config c -> node c.
+
+    Lets a plain KPGM graph (no attribute matrix) run through the exact
+    quilting engine — fused device rounds, on-device top-up, ``mesh=``
+    sharding with bit-identical results — as the trivial B = 1 quilt whose
+    lookup is the identity.  Used by ``repro.api.KPGMSampler``; O(2^d)
+    memory, so callers gate on d.
+
+    Unlike :func:`build_quilt_plan`, this IS content-cached (keyed by the
+    theta digest): identity plans are fully determined by thetas and
+    immutable, so sharing them across sessions — and across the repeated
+    ``kpgm_sample`` shim calls that would otherwise rebuild the O(2^d)
+    partition every time — is pure win.  Sessions keep their reference, so
+    :func:`clear_plan_cache` still cannot pull a plan out from under one.
+    """
+    th = np.asarray(thetas)
+    tkey = _digest(th)
+    plan = _KPGM_PLAN_CACHE.get(tkey)
+    if plan is not None:
+        _KPGM_PLAN_CACHE.move_to_end(tkey)
+        return plan
+    d = int(th.shape[0])
+    lam = np.arange(1 << d, dtype=np.int64)
+    F_id = np.asarray(magm.attributes_from_configs(jnp.asarray(lam), d))
+    plan = _assemble_plan(F_id, th, _partition_state(F_id, d))
+    _cache_put(_KPGM_PLAN_CACHE, tkey, plan)
+    return plan
+
+
+def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
+    """Build (or fetch) the cached QuiltPlan for an (F, thetas) pair.
+
+    Keyed by content: repeated samples over the same attribute matrix reuse
+    the cached partition + device tables (no re-partition), and the same F
+    under new thetas only re-derives the theta-dependent pieces.  This is
+    the shim-path fallback; sessions use :func:`build_quilt_plan` and hold
+    the plan themselves.
+    """
+    F = np.asarray(F)
+    th = np.asarray(thetas)
+    fkey = _digest(F)
+    tkey = _digest(th)
+    plan = _PLAN_CACHE.get((fkey, tkey))
+    if plan is not None:
+        PLAN_STATS["plan_hits"] += 1
+        _PLAN_CACHE.move_to_end((fkey, tkey))
+        return plan
+
+    cached_part = _PART_CACHE.get(fkey)
+    if cached_part is None:
+        cached_part = _partition_state(F, F.shape[1])
+        _cache_put(_PART_CACHE, fkey, cached_part)
+    plan = _assemble_plan(F, th, cached_part)
     _cache_put(_PLAN_CACHE, (fkey, tkey), plan)
     return plan
 
@@ -269,8 +353,12 @@ def _round_body(
         jnp.int32
     )
     gid = gids[local]
-    kb = gid // num_blocks
-    lb = gid % num_blocks
+    # graph ids beyond B^2 are batched samples (repro.api sample_batch):
+    # sample s's block pair g' lives at gid = s * B^2 + g', so the block
+    # decode reduces mod B^2 (a no-op for the single-sample gid < B^2 case)
+    block = gid % (num_blocks * num_blocks)
+    kb = block // num_blocks
+    lb = block % num_blocks
     if use_kernel:
         table_cfg, table_node = tables
         scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
@@ -322,71 +410,187 @@ def _compiled_round(
     return jax.jit(body)
 
 
-def quilt_sample(
+class DeviceBatchUnavailable(RuntimeError):
+    """Raised by :func:`quilt_run` when ``num_samples > 1`` resolves to the
+    host backend (no fused multi-sample path exists there); callers fall
+    back to a per-sample loop."""
+
+
+class QuiltRun(NamedTuple):
+    """One executed quilting run: fixed-shape device buffers + emission.
+
+    The engine result shared by every public surface: ``edges()`` is the
+    classic concatenated array, ``iter_chunks()`` the streaming emission
+    (``repro.api.MAGMSampler.sample_stream``), ``edges_per_sample()`` the
+    fused-batch split.  ``tail`` holds ``(graph_id, (E, 2))`` pieces from
+    the pathological host top-up fallback, appended after the device edges
+    in insertion order; ``host_edges``/``host_stats`` are set instead of the
+    device fields when the run took the host backend.
+    """
+
+    plan: QuiltPlan
+    num_samples: int
+    targets: np.ndarray  # (num_samples * B^2,)
+    counts: np.ndarray  # (num_samples * B^2,) per-graph unique counts
+    snode: Optional[jax.Array]  # (g_pad * slots,) candidate node ids
+    dnode: Optional[jax.Array]
+    keep: Optional[np.ndarray]  # host bool: taken AND both lookups hit
+    slots_per_graph: int
+    tail: Tuple[Tuple[int, np.ndarray], ...]
+    host_edges: Optional[np.ndarray]
+    host_stats: Optional[QuiltStats]
+
+    def kept_edges(self) -> int:
+        if self.host_edges is not None:
+            return int(self.host_edges.shape[0])
+        kept = int(self.keep.sum()) if self.keep is not None else 0
+        return kept + sum(int(p.shape[0]) for _, p in self.tail)
+
+    def edges(self) -> np.ndarray:
+        """Concatenated (E, 2) int64 edge array (all samples, sample-major)."""
+        if self.host_edges is not None:
+            return self.host_edges
+        if self.num_samples != 1 and self.tail:
+            # tail pieces land after ALL device edges; only the per-sample
+            # split reassembles a sample-major order for fused batches
+            return np.concatenate(self.edges_per_sample(), axis=0)
+        pieces: List[np.ndarray] = []
+        if self.keep is not None and self.keep.any():
+            sn = np.asarray(self.snode)
+            dn = np.asarray(self.dnode)
+            pieces.append(
+                np.stack(
+                    [sn[self.keep], dn[self.keep]], axis=1
+                ).astype(np.int64)
+            )
+        pieces.extend(p for _, p in self.tail)
+        pieces = [p for p in pieces if p.size]
+        if not pieces:
+            return np.zeros((0, 2), dtype=np.int64)
+        return np.concatenate(pieces, axis=0)
+
+    def iter_chunks(self, chunk_edges: int):
+        """Yield fixed-size deduped edge chunks without materializing the
+        full edge list (the last chunk may be shorter)."""
+        if self.num_samples != 1:
+            raise ValueError("iter_chunks streams single-sample runs only")
+        if self.host_edges is not None:
+            return dedup.rechunk_edges([self.host_edges], chunk_edges)
+        if self.keep is None:
+            return dedup.rechunk_edges(
+                [p for _, p in self.tail], chunk_edges
+            )
+        return dedup.iter_edge_chunks(
+            self.snode,
+            self.dnode,
+            self.keep,
+            chunk_edges,
+            tail=[p for _, p in self.tail],
+        )
+
+    def edges_per_sample(self) -> List[np.ndarray]:
+        """Split the kept edges of a fused batch back into per-sample
+        (E_s, 2) arrays (candidate order is sample-major, so each sample's
+        edges are contiguous)."""
+        G = self.plan.num_graphs
+        S = self.num_samples
+        if self.host_edges is not None:
+            return [self.host_edges]
+        per: List[List[np.ndarray]] = [[] for _ in range(S)]
+        if self.keep is not None and self.keep.any():
+            sn = np.asarray(self.snode)
+            dn = np.asarray(self.dnode)
+            idx = np.flatnonzero(self.keep)
+            samp = (idx // max(self.slots_per_graph, 1)) // G
+            dev = np.stack([sn[idx], dn[idx]], axis=1).astype(np.int64)
+            bounds = np.searchsorted(samp, np.arange(1, S))
+            for s, piece in enumerate(np.split(dev, bounds)):
+                per[s].append(piece)
+        for g, piece in self.tail:
+            per[g // G].append(piece)
+        return [
+            np.concatenate(p, axis=0)
+            if p and sum(x.size for x in p)
+            else np.zeros((0, 2), dtype=np.int64)
+            for p in per
+        ]
+
+    def stats(self, kept: Optional[int] = None) -> QuiltStats:
+        if self.host_stats is not None:
+            return self.host_stats
+        return QuiltStats(
+            B=self.plan.B,
+            num_kpgm_draws=self.plan.num_graphs,
+            kpgm_edges_total=int(self.counts.sum()),
+            kept_edges=self.kept_edges() if kept is None else int(kept),
+            heavy_groups=0,
+            light_nodes=self.plan.n,
+            bprime=None,
+        )
+
+    def stats_per_sample(
+        self, kept_sizes: List[int]
+    ) -> List[QuiltStats]:
+        G = self.plan.num_graphs
+        csum = self.counts.reshape(self.num_samples, G).sum(axis=1)
+        return [
+            QuiltStats(
+                B=self.plan.B,
+                num_kpgm_draws=G,
+                kpgm_edges_total=int(csum[s]),
+                kept_edges=int(kept_sizes[s]),
+                heavy_groups=0,
+                light_nodes=self.plan.n,
+                bprime=None,
+            )
+            for s in range(self.num_samples)
+        ]
+
+
+def quilt_run(
     key: jax.Array,
-    params: magm.MAGMParams,
-    F: np.ndarray,
+    plan: QuiltPlan,
     *,
+    num_samples: int = 1,
+    targets: Optional[np.ndarray] = None,
     max_rounds: int = 8,
     oversample: float = 1.05,
     backend: str = "auto",
     use_kernel: Optional[bool] = None,
     mesh=None,
-    return_stats: bool = False,
-) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
-    """Sample a MAGM graph by quilting (Algorithm 2).  Returns (E, 2) int64.
+) -> QuiltRun:
+    """Execute the quilting engine for a prebuilt plan; returns a QuiltRun.
 
-    ``F`` is the (n, d) attribute matrix (sample with magm.sample_attributes or
-    supply observed attributes).  Requires d == log2-range of configs; node
-    count n is free (the KPGM draws live in config space of size 2^d).
-
-    The default backend runs the device-resident pipeline (module docstring);
-    ``backend="host"`` forces the PR-1 reference path (also used automatically
-    when the plan has no dense inverse or the per-device batch exceeds
-    kpgm.DEVICE_MAX_CANDIDATES).  ``use_kernel`` overrides the Pallas-vs-jnp
-    lookup choice (defaults to the Pallas kernel on real TPUs only).
-
-    ``mesh`` shards the B^2 block-pair candidate streams along the ``graphs``
-    logical axis (launch.mesh.make_sampler_mesh, or any mesh with a
-    data-parallel axis — see repro.dist.sharding.graph_shard_axes): every
-    device descends + dedups only its own graphs, and the final gather is
-    the only cross-device step.  Per-graph PRNG key folding makes the result
-    BIT-IDENTICAL to the single-device path for the same key, whatever the
-    device count.
-
-    Examples
-    --------
-    >>> import numpy as np, jax
-    >>> from repro.core import magm, quilt
-    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
-    >>> params = magm.make_params(theta, mu=0.5, d=5)
-    >>> F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), 24, params.mu))
-    >>> edges = quilt.quilt_sample(jax.random.PRNGKey(1), params, F)
-    >>> edges.dtype, edges.shape[1]
-    (dtype('int64'), 2)
-    >>> bool((edges >= 0).all()) and bool((edges < 24).all())
-    True
-    >>> int(np.unique(edges[:, 0] * 24 + edges[:, 1]).size) == len(edges)
-    True
+    The session-facing core of :func:`quilt_sample` (which wraps it behind
+    the deprecated free-function signature).  ``num_samples > 1`` fuses a
+    whole batch of independent MAGM samples into the SAME per-round device
+    dispatches — sample s's block pair g' is graph ``s * B^2 + g'`` of the
+    segmented dedup — and raises :class:`DeviceBatchUnavailable` if the
+    backend decision resolves to host.  ``targets`` overrides the per-graph
+    Normal(m, m - v) edge-count draw (the key is split identically either
+    way, so the candidate streams don't depend on the override).
     """
-    F = np.asarray(F)
-    if F.size == 0:
-        out = np.zeros((0, 2), dtype=np.int64)
-        if return_stats:
-            return out, QuiltStats(0, 0, 0, 0, 0, 0, None)
-        return out
-    plan = get_quilt_plan(F, params.thetas)
+    S = int(num_samples)
     G = plan.num_graphs
+    gtot = S * G
     ncfg = 1 << plan.d
+    targets_given = targets is not None
 
     key, sub = jax.random.split(key)
-    draws = (
-        np.asarray(jax.random.normal(sub, (G,))) * plan.std_edges
-        + plan.mean_edges
-    )
-    targets = np.clip(np.round(draws), 0, min(ncfg * ncfg, 2**62)).astype(
-        np.int64
-    )
+    if targets is None:
+        draws = (
+            np.asarray(jax.random.normal(sub, (gtot,))) * plan.std_edges
+            + plan.mean_edges
+        )
+        targets = np.clip(
+            np.round(draws), 0, min(ncfg * ncfg, 2**62)
+        ).astype(np.int64)
+    else:
+        targets = np.clip(
+            np.asarray(targets, dtype=np.int64).reshape(gtot),
+            0,
+            min(ncfg * ncfg, 2**62),
+        )
     total = int(targets.sum())
 
     if use_kernel is None:
@@ -398,37 +602,55 @@ def quilt_sample(
 
     from repro.dist import sharding as _dist_sharding
 
-    axes, nshards = _dist_sharding.graph_shard_axes(mesh)
+    layout = _dist_sharding.graph_layout(mesh, gtot)
+    axes, g_pad = layout.axes, layout.padded
     if not axes:
         mesh = None  # no usable graph axis: run the unsharded program
-        nshards = 1
-    g_pad = G + (-G) % nshards
     ask0 = dedup.uniform_ask(targets, oversample)
-    # the backend decision must be LAYOUT-INVARIANT (G, not g_pad; no
+    # the backend decision must be LAYOUT-INVARIANT (gtot, not g_pad; no
     # nshards factor) or mesh and no-mesh runs could pick different
     # samplers near the cap and break the bit-identity contract; meshes
     # with spare aggregate memory can force backend="device" instead
     use_device = backend == "device" or (
         backend == "auto"
         and (plan.inv is not None or use_kernel)
-        and G * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
+        and gtot * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
     )
     if not use_device:
-        return _quilt_sample_host(key, params, plan, return_stats)
+        if S > 1:
+            raise DeviceBatchUnavailable(
+                "fused sample_batch needs the device backend "
+                f"(backend={backend!r}, candidates={gtot * ask0})"
+            )
+        if targets_given:
+            # the host reference path draws its own per-block X ~ N(m, m-v)
+            # and cannot honor an explicit target; callers (KPGMSampler)
+            # catch this and run their own target-honoring host loop
+            raise DeviceBatchUnavailable(
+                "targets override needs the device backend "
+                f"(backend={backend!r}, candidates={gtot * ask0})"
+            )
+        edges, st = _quilt_sample_host(
+            key, plan, max_rounds=max_rounds, oversample=oversample
+        )
+        return QuiltRun(
+            plan, 1, targets, np.zeros(gtot, np.int64), None, None, None,
+            0, (), edges, st,
+        )
 
-    edges_src: List[np.ndarray] = []
-    edges_dst: List[np.ndarray] = []
-    counts = np.zeros(G, dtype=np.int64)
+    tail: List[Tuple[int, np.ndarray]] = []
+    counts = np.zeros(gtot, dtype=np.int64)
     seen_cfg: Optional[List[np.ndarray]] = None
     outs = None
     shortfall = targets.copy()
     key, rkey = jax.random.split(key)
+    a_tot = 0
 
     if total > 0:
         gids = np.zeros(g_pad, dtype=np.int32)
-        gids[:G] = np.arange(G, dtype=np.int32)
+        gids[:gtot] = np.arange(gtot, dtype=np.int32)
         tpad = np.zeros(g_pad, dtype=np.int32)
-        tpad[:G] = targets
+        tpad[:gtot] = targets
         gids_j = jnp.asarray(gids)
         tpad_j = jnp.asarray(tpad)
         tables = (
@@ -439,12 +661,12 @@ def quilt_sample(
             ask = dedup.uniform_ask(shortfall, oversample)
             if ask == 0:
                 break
-            if rounds and G * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
+            if rounds and gtot * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
                 # the cumulative stream would outgrow the device budget
                 # (near-saturated targets): let the host fallback finish the
                 # residual instead of OOMing.  Like the backend decision,
-                # this guard is layout-invariant (G * total, no nshards), so
-                # every mesh breaks at the same round with the same state.
+                # this guard is layout-invariant (gtot * total, no nshards),
+                # so every mesh breaks at the same round with the same state.
                 break
             # each dispatch re-processes [prior rounds || fresh draws] as one
             # longer per-graph stream: the seen keys are carried through the
@@ -458,22 +680,21 @@ def quilt_sample(
             DISPATCH_COUNTERS[
                 "device_rounds" if r == 0 else "device_topup_rounds"
             ] += 1
-            counts = np.asarray(outs[5]).astype(np.int64)[:G]
+            counts = np.asarray(outs[5]).astype(np.int64)[:gtot]
             shortfall = targets - counts
             if shortfall.max(initial=0) <= 0:
                 break
+        a_tot = sum(rounds)
 
+    keep = None
+    snode = dnode = None
     if outs is not None:
         scfg, dcfg, snode, dnode, take, _ = outs
-        take_h = np.asarray(take)
-        sn = np.asarray(snode)
-        dn = np.asarray(dnode)
-        keep = take_h & (sn >= 0) & (dn >= 0)
-        edges_src.append(sn[keep].astype(np.int64))
-        edges_dst.append(dn[keep].astype(np.int64))
+        keep = np.asarray(take & (snode >= 0) & (dnode >= 0))
         if shortfall.max(initial=0) > 0:
             # pathological: max_rounds device rounds still short — fall back
             # to the PR-1 host rejection loop for the residual
+            take_h = np.asarray(take)
             flat_taken = (
                 np.asarray(scfg)[take_h].astype(np.int64) * ncfg
                 + np.asarray(dcfg)[take_h].astype(np.int64)
@@ -481,40 +702,67 @@ def quilt_sample(
             full_counts = np.asarray(outs[5]).astype(np.int64)
             seen_cfg = list(
                 np.split(flat_taken, np.cumsum(full_counts)[:-1])
-            )[:G]
+            )[:gtot]
 
     if seen_cfg is not None:
         counts = _host_quilt_topup(
-            key,
-            plan,
-            targets,
-            counts,
-            seen_cfg,
-            edges_src,
-            edges_dst,
-            max_rounds,
-            oversample,
+            key, plan, targets, counts, seen_cfg, tail, max_rounds, oversample
         )
 
-    out = (
-        np.stack(
-            [np.concatenate(edges_src), np.concatenate(edges_dst)], axis=1
-        )
-        if edges_src and sum(e.size for e in edges_src)
-        else np.zeros((0, 2), dtype=np.int64)
+    return QuiltRun(
+        plan, S, targets, counts, snode, dnode, keep, a_tot, tuple(tail),
+        None, None,
     )
+
+
+def quilt_sample(
+    key: jax.Array,
+    params: magm.MAGMParams,
+    F: np.ndarray,
+    *,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    backend: str = "auto",
+    use_kernel: Optional[bool] = None,
+    mesh=None,
+    return_stats: bool = False,
+) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
+    """DEPRECATED shim over ``repro.api.MAGMSampler`` — sample one MAGM graph.
+
+    Delegates to the session engine (:func:`quilt_run`) through the global
+    plan cache, and is pinned bit-identical to
+    ``MAGMSampler(SamplerConfig(params=params, F=F, ...)).sample(key)`` by
+    test.  New code should hold a session: repeated ``.sample()`` calls
+    amortize the partition/plan build and the per-call content digest this
+    shim pays every time.  See docs/API.md for the migration table.
+
+    ``F`` is the (n, d) attribute matrix (sample with magm.sample_attributes
+    or supply observed attributes).  ``backend``/``use_kernel``/``mesh``
+    behave exactly as on :class:`repro.api.SamplerConfig`: the default
+    backend runs the device-resident pipeline, ``mesh=`` shards the B^2
+    block-pair streams bit-identically across any device count.
+    """
+    _warn_shim("quilt_sample", "repro.api.MAGMSampler.sample")
+    F = np.asarray(F)
+    if F.size == 0:
+        out = np.zeros((0, 2), dtype=np.int64)
+        if return_stats:
+            return out, QuiltStats(0, 0, 0, 0, 0, 0, None)
+        return out
+    run = quilt_run(
+        key,
+        get_quilt_plan(F, params.thetas),
+        max_rounds=max_rounds,
+        oversample=oversample,
+        backend=backend,
+        use_kernel=use_kernel,
+        mesh=mesh,
+    )
+    out = run.edges()
     # Blocks are disjoint in node space (each (i, j) pair belongs to exactly
     # one (|Z_i|, |Z_j|) block), so no cross-block dedup is needed.
     if return_stats:
-        return out, QuiltStats(
-            B=plan.B,
-            num_kpgm_draws=G,
-            kpgm_edges_total=int(counts.sum()),
-            kept_edges=out.shape[0],
-            heavy_groups=0,
-            light_nodes=F.shape[0],
-            bprime=None,
-        )
+        return out, run.stats(out.shape[0])
     return out
 
 
@@ -524,8 +772,7 @@ def _host_quilt_topup(
     targets: np.ndarray,
     counts: np.ndarray,
     seen_cfg: List[np.ndarray],
-    edges_src: List[np.ndarray],
-    edges_dst: List[np.ndarray],
+    tail: List[Tuple[int, np.ndarray]],
     max_rounds: int,
     oversample: float,
 ) -> np.ndarray:
@@ -533,7 +780,8 @@ def _host_quilt_topup(
 
     Per top-up round: ONE small device batch shared across the short graphs,
     then host-side arrival-order dedup + block lookup (the shortfall is a few
-    edges, so the O(B) python loop here is off the hot path)."""
+    edges, so the O(B) python loop here is off the hot path).  Appends
+    ``(graph_id, (E, 2))`` pieces to ``tail`` in arrival order."""
     ncfg = 1 << plan.d
     part = plan.part
     for _ in range(max_rounds):
@@ -561,7 +809,8 @@ def _host_quilt_topup(
                 continue
             seen_cfg[g] = np.concatenate([seen_cfg[g], fresh])
             counts[g] += fresh.size
-            k, l = g // plan.B, g % plan.B
+            blk = g % (plan.B * plan.B)  # sample-major gid for fused batches
+            k, l = blk // plan.B, blk % plan.B
             sn = partition.lookup_nodes(
                 part.sorted_configs[k], part.sorted_nodes[k], fresh // ncfg
             )
@@ -570,25 +819,34 @@ def _host_quilt_topup(
             )
             keep = (sn >= 0) & (dn >= 0)
             if keep.any():
-                edges_src.append(sn[keep])
-                edges_dst.append(dn[keep])
+                tail.append(
+                    (g, np.stack([sn[keep], dn[keep]], axis=1))
+                )
     return counts
 
 
 def _quilt_sample_host(
     key: jax.Array,
-    params: magm.MAGMParams,
     plan: QuiltPlan,
-    return_stats: bool,
-):
-    """PR-1 reference path: kpgm_sample_many + per-block host lookup."""
+    *,
+    max_rounds: int,
+    oversample: float,
+) -> Tuple[np.ndarray, QuiltStats]:
+    """PR-1 reference path: kpgm_sample_many + per-block host lookup.
+
+    The rejection knobs come from the caller's config (quilt_run), so the
+    host backend obeys the same ``max_rounds``/``oversample`` as the device
+    pipeline — note this changed the host-path candidate stream vs PR 3,
+    which ran kpgm_sample_many at its own oversample=1.1 default."""
     part = plan.part
-    kp = kpgm.KPGMParams(params.thetas)
+    kp = kpgm.KPGMParams(plan.thetas)
     edges = []
     draws = part.B * part.B
     kpgm_total = 0
     key, sub = jax.random.split(key)
-    graphs = kpgm.kpgm_sample_many(sub, kp, draws)
+    graphs = kpgm.kpgm_sample_many(
+        sub, kp, draws, max_rounds=max_rounds, oversample=oversample
+    )
     for k in range(part.B):
         for l in range(part.B):
             e = graphs[k * part.B + l]
@@ -610,17 +868,15 @@ def _quilt_sample_host(
         if edges
         else np.zeros((0, 2), dtype=np.int64)
     )
-    if return_stats:
-        return out, QuiltStats(
-            B=part.B,
-            num_kpgm_draws=draws,
-            kpgm_edges_total=kpgm_total,
-            kept_edges=out.shape[0],
-            heavy_groups=0,
-            light_nodes=plan.n,
-            bprime=None,
-        )
-    return out
+    return out, QuiltStats(
+        B=part.B,
+        num_kpgm_draws=draws,
+        kpgm_edges_total=kpgm_total,
+        kept_edges=out.shape[0],
+        heavy_groups=0,
+        light_nodes=plan.n,
+        bprime=None,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -672,40 +928,48 @@ def choose_bprime(
     return best_bp, best_t
 
 
-def quilt_sample_fast(
-    key: jax.Array,
-    params: magm.MAGMParams,
-    F: np.ndarray,
-    *,
-    bprime: Optional[int] = None,
-    seed: int = 0,
-    mesh=None,
-    return_stats: bool = False,
-) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
-    """Section-5 sampler: quilt the light nodes, ER-sample the heavy blocks.
+class SplitPlan(NamedTuple):
+    """Precomputed state for the Section-5 split sampler.
 
-    Configurations occurring more than ``bprime`` times become R "heavy"
-    groups whose block pairs are scalar-p Erdos-Renyi draws (the
-    ball-dropping regime of Moreno et al., arXiv:1202.6001); the remaining
-    light nodes are quilted with :func:`quilt_sample` (which ``mesh``
-    shards across devices, see there).  ``bprime=None`` minimises the
-    paper's cost model T(B') via :func:`choose_bprime`.
-
-    Examples
-    --------
-    >>> import numpy as np, jax
-    >>> from repro.core import magm, quilt
-    >>> theta = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
-    >>> params = magm.make_params(theta, mu=0.7, d=5)  # unbalanced mu
-    >>> F = np.asarray(magm.sample_attributes(jax.random.PRNGKey(0), 48, params.mu))
-    >>> edges, info = quilt.quilt_sample_fast(
-    ...     jax.random.PRNGKey(1), params, F, return_stats=True
-    ... )
-    >>> edges.shape[1], edges.dtype
-    (2, dtype('int64'))
-    >>> info.heavy_groups >= 0 and 0 <= info.light_nodes <= 48
-    True
+    Everything that depends only on (F, thetas, bprime): the heavy/light
+    split, the per-pair scalar edge probabilities (bilinear form), and the
+    light-subgraph QuiltPlan.  Sessions (``repro.api.MAGMSampler`` with
+    ``split=True``) build this ONCE and amortize it across samples — the
+    probability matrices alone were previously recomputed on every
+    ``quilt_sample_fast`` call.
     """
+
+    n: int
+    d: int
+    bprime: int
+    W: np.ndarray  # light node ids
+    heavy_cfgs: np.ndarray  # (R,) heavy configuration ids
+    sizes: np.ndarray  # (R,) heavy group sizes
+    offs: np.ndarray  # (R,) offsets into cat
+    cat: np.ndarray  # concatenated heavy group node ids
+    p_hh: np.ndarray  # (R, R) heavy-heavy edge probabilities
+    p_wh: np.ndarray  # (|W|, R) light-source strip probabilities
+    p_hw: np.ndarray  # (R, |W|) heavy-source strip probabilities
+    light_plan: Optional[QuiltPlan]  # quilt plan of F[W] (None if W empty)
+
+    @property
+    def R(self) -> int:
+        return int(self.heavy_cfgs.size)
+
+
+def build_split_plan(
+    F: np.ndarray,
+    params: magm.MAGMParams,
+    bprime: Optional[int] = None,
+    *,
+    use_cache: bool = False,
+) -> SplitPlan:
+    """Derive the Section-5 split for (F, params); ``bprime=None`` minimises
+    the paper's cost model T(B') via :func:`choose_bprime`.
+
+    ``use_cache=True`` routes the light-subgraph plan through the global
+    content-keyed cache (the shim path); sessions leave it False and own
+    the plan."""
     F = np.asarray(F)
     n, d = F.shape
     lam = np.asarray(magm.configs_from_attributes(jnp.asarray(F)))
@@ -715,14 +979,103 @@ def quilt_sample_fast(
             counts, n, d, magm.expected_edges(params, n)
         )
 
-    heavy_mask_cfg = counts > bprime
-    heavy_cfgs = uniq[heavy_mask_cfg]
+    heavy_cfgs = uniq[counts > bprime]
     node_is_heavy = np.isin(lam, heavy_cfgs)
     W = np.nonzero(~node_is_heavy)[0]  # light nodes
     heavy_groups = [np.nonzero(lam == c)[0] for c in heavy_cfgs]
     R = len(heavy_groups)
 
-    rng = np.random.default_rng(seed)
+    sizes = np.array([g.size for g in heavy_groups], dtype=np.int64)
+    offs = (
+        np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        if R
+        else np.zeros(0, dtype=np.int64)
+    )
+    cat = (
+        np.concatenate(heavy_groups) if R else np.zeros(0, dtype=np.int64)
+    )
+    p_hh = np.zeros((0, 0))
+    p_wh = np.zeros((W.size, 0))
+    p_hw = np.zeros((0, W.size))
+    if R:
+        heavy_attr = jnp.asarray(
+            magm.attributes_from_configs(jnp.asarray(heavy_cfgs), d)
+        )
+        p_hh = np.minimum(
+            np.exp(
+                np.asarray(
+                    magm.log_edge_prob(heavy_attr, heavy_attr, params.thetas)
+                )
+            ),
+            1.0,
+        )
+        if W.size:
+            FW = jnp.asarray(F[W])
+            p_wh = np.minimum(
+                np.exp(
+                    np.asarray(
+                        magm.log_edge_prob(FW, heavy_attr, params.thetas)
+                    )
+                ),
+                1.0,
+            )
+            p_hw = np.minimum(
+                np.exp(
+                    np.asarray(
+                        magm.log_edge_prob(heavy_attr, FW, params.thetas)
+                    )
+                ),
+                1.0,
+            )
+
+    light_plan = None
+    if W.size:
+        light_plan = (
+            get_quilt_plan(F[W], params.thetas)
+            if use_cache
+            else build_quilt_plan(F[W], params.thetas)
+        )
+    return SplitPlan(
+        n=n, d=d, bprime=int(bprime), W=W, heavy_cfgs=heavy_cfgs,
+        sizes=sizes, offs=offs, cat=cat, p_hh=p_hh, p_wh=p_wh, p_hw=p_hw,
+        light_plan=light_plan,
+    )
+
+
+def rng_from_key(key: jax.Array) -> np.random.Generator:
+    """Deterministic numpy Generator derived from a JAX PRNG key.
+
+    The Section-5 split sampler draws its Erdos-Renyi blocks with numpy
+    (binomial counts + distinct-cell placement); deriving the generator
+    from the SAME key that drives the quilted light part gives the sampler
+    the one-key contract of every other entry point."""
+    sub = jax.random.fold_in(key, 0x5EED)
+    try:
+        data = jax.random.key_data(sub)
+    except (TypeError, ValueError, AttributeError):
+        data = sub
+    entropy = [int(x) for x in np.asarray(data, dtype=np.uint32).ravel()]
+    return np.random.default_rng(entropy)
+
+
+def split_run(
+    key: jax.Array,
+    sp: SplitPlan,
+    rng: np.random.Generator,
+    *,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    backend: str = "auto",
+    use_kernel: Optional[bool] = None,
+    mesh=None,
+) -> Tuple[np.ndarray, QuiltStats]:
+    """Execute the Section-5 split sampler for a prebuilt :class:`SplitPlan`.
+
+    Quilts the light-light subgraph through :func:`quilt_run` and draws the
+    heavy blocks / strips as scalar-p Erdos-Renyi pieces from ``rng``
+    (the ball-dropping regime of Moreno et al., arXiv:1202.6001)."""
+    W = sp.W
+    R = sp.R
     pieces = []
     stats_b = 0
     draws = kp_total = 0
@@ -730,32 +1083,24 @@ def quilt_sample_fast(
     # (1) light x light: quilt the W-subgraph (configs unchanged; B <= B').
     if W.size:
         key, sub = jax.random.split(key)
-        res = quilt_sample(sub, params, F[W], mesh=mesh, return_stats=True)
-        ew, st = res
+        run = quilt_run(
+            sub, sp.light_plan, max_rounds=max_rounds,
+            oversample=oversample, backend=backend, use_kernel=use_kernel,
+            mesh=mesh,
+        )
+        ew = run.edges()
+        st = run.stats(ew.shape[0])
         stats_b, draws, kp_total = st.B, st.num_kpgm_draws, st.kpgm_edges_total
         if ew.size:
             pieces.append(np.stack([W[ew[:, 0]], W[ew[:, 1]]], axis=1))
 
-    # Edge probabilities between configurations via the bilinear form.
     if R:
-        sizes = np.array([g.size for g in heavy_groups], dtype=np.int64)
-        offs = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-        cat = np.concatenate(heavy_groups)
-        heavy_attr = np.asarray(
-            magm.attributes_from_configs(jnp.asarray(heavy_cfgs), d)
-        )
+        sizes, offs, cat = sp.sizes, sp.offs, sp.cat
         # (2) heavy x heavy blocks (including the diagonal): scalar-p ER
         # blocks, all R^2 at once — one batched binomial for the counts and
         # one _sample_cells call for every block's distinct flat cell ids.
-        logq_hh = np.asarray(
-            magm.log_edge_prob(
-                jnp.asarray(heavy_attr), jnp.asarray(heavy_attr), params.thetas
-            )
-        )
         cells = sizes[:, None] * sizes[None, :]
-        counts_hh = rng.binomial(
-            cells, np.minimum(np.exp(logq_hh), 1.0)
-        ).reshape(-1)
+        counts_hh = rng.binomial(cells, sp.p_hh).reshape(-1)
         cell_ids = _sample_cells(rng, counts_hh, cells.reshape(-1))
         if cell_ids.size:
             rep = np.repeat(np.arange(R * R), counts_hh)
@@ -769,20 +1114,10 @@ def quilt_sample_fast(
         # probability against group b is the scalar P_{lam_i, lam'_b}; both
         # directions batch the |W| x R binomials and share one _sample_cells.
         if W.size:
-            logq_wh = np.asarray(
-                magm.log_edge_prob(
-                    jnp.asarray(F[W]), jnp.asarray(heavy_attr), params.thetas
-                )
-            )  # (|W|, R)
-            logq_hw = np.asarray(
-                magm.log_edge_prob(
-                    jnp.asarray(heavy_attr), jnp.asarray(F[W]), params.thetas
-                )
-            )  # (R, |W|)
             sizes_rep = np.tile(sizes, W.size)
-            for logq, flip in ((logq_wh, False), (logq_hw.T, True)):
+            for p, flip in ((sp.p_wh, False), (sp.p_hw.T, True)):
                 counts_s = rng.binomial(
-                    sizes[None, :], np.minimum(np.exp(logq), 1.0)
+                    sizes[None, :], p
                 ).reshape(-1)  # row-major over (light i, group b)
                 cols = _sample_cells(rng, counts_s, sizes_rep)
                 if not cols.size:
@@ -802,16 +1137,66 @@ def quilt_sample_fast(
         if pieces
         else np.zeros((0, 2), dtype=np.int64)
     )
-    if return_stats:
-        return out, QuiltStats(
-            B=stats_b,
-            num_kpgm_draws=draws,
-            kpgm_edges_total=kp_total,
-            kept_edges=out.shape[0],
-            heavy_groups=R,
-            light_nodes=int(W.size),
-            bprime=int(bprime),
+    return out, QuiltStats(
+        B=stats_b,
+        num_kpgm_draws=draws,
+        kpgm_edges_total=kp_total,
+        kept_edges=out.shape[0],
+        heavy_groups=R,
+        light_nodes=int(W.size),
+        bprime=int(sp.bprime),
+    )
+
+
+_SEED_UNSET = object()
+
+
+def quilt_sample_fast(
+    key: jax.Array,
+    params: magm.MAGMParams,
+    F: np.ndarray,
+    *,
+    bprime: Optional[int] = None,
+    seed=_SEED_UNSET,
+    mesh=None,
+    backend: str = "auto",
+    use_kernel: Optional[bool] = None,
+    return_stats: bool = False,
+) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
+    """DEPRECATED shim over ``repro.api.MAGMSampler`` (``split=True``) —
+    Section-5 sampler: quilt the light nodes, ER-sample the heavy blocks.
+
+    Configurations occurring more than ``bprime`` times become R "heavy"
+    groups whose block pairs are scalar-p Erdos-Renyi draws; the remaining
+    light nodes are quilted (``mesh`` shards that part across devices).
+    ``bprime=None`` minimises the paper's cost model T(B') via
+    :func:`choose_bprime`.
+
+    The whole draw is now keyed by ``key`` alone (the numpy generator for
+    the ER blocks derives from it via :func:`rng_from_key`), matching every
+    other sampler.  ``seed=`` survives one release as a deprecated alias
+    that pins the old numpy stream.  Pinned bit-identical by test to
+    ``MAGMSampler(SamplerConfig(..., split=True)).sample(key)``.
+    """
+    _warn_shim(
+        "quilt_sample_fast", "repro.api.MAGMSampler (SamplerConfig split=True)"
+    )
+    if seed is _SEED_UNSET:
+        rng = rng_from_key(key)
+    else:
+        warnings.warn(
+            "quilt_sample_fast(seed=...) is deprecated: omit it and the "
+            "numpy stream derives from `key` (rng_from_key)",
+            DeprecationWarning,
+            stacklevel=2,
         )
+        rng = np.random.default_rng(seed)
+    sp = build_split_plan(F, params, bprime, use_cache=True)
+    out, st = split_run(
+        key, sp, rng, mesh=mesh, backend=backend, use_kernel=use_kernel
+    )
+    if return_stats:
+        return out, st
     return out
 
 

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import MAGMSampler, SamplerConfig
 from repro.configs import magm_paper
-from repro.core import magm, quilt
+from repro.core import magm
 
 
 @dataclasses.dataclass
@@ -41,11 +42,10 @@ class MAGMCorpus:
         key = jax.random.PRNGKey(self.seed)
         f_key, q_key = jax.random.split(key)
         F = np.asarray(magm.sample_attributes(f_key, self.num_nodes, params.mu))
-        edges, stats = quilt.quilt_sample_fast(
-            q_key, params, F, seed=self.seed, return_stats=True
-        )
-        self.quilt_stats = stats
-        self._build_csr(edges)
+        sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
+        gs = sampler.sample(q_key)
+        self.quilt_stats = gs.stats
+        self._build_csr(gs.edges)
 
     # --- graph -> walk machinery ---------------------------------------
     def _build_csr(self, edges: np.ndarray) -> None:

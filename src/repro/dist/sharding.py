@@ -20,7 +20,7 @@ resident, not an all-gather per layer.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -31,6 +31,23 @@ from repro.dist.hints import build_spec
 
 # bf16 weight budget per chip under pure TP; above this, serving keeps FSDP
 _INFERENCE_WEIGHT_BUDGET_BYTES = 4 << 30
+
+
+class GraphLayout(NamedTuple):
+    """Resolved placement of a batch of iid sampler graphs on a mesh."""
+
+    axes: Tuple[str, ...]  # mesh axes carrying the "graphs" role (may be ())
+    nshards: int  # product of those axes' sizes (1 when unsharded)
+    padded: int  # num_graphs rounded up to a multiple of nshards
+
+
+def graph_layout(mesh, num_graphs: int) -> GraphLayout:
+    """:func:`graph_shard_axes` plus the padded graph count the quilting
+    round program uses (zero-target padding rows emit nothing, so padding
+    to a shard multiple is free)."""
+    axes, nshards = graph_shard_axes(mesh)
+    g = int(num_graphs)
+    return GraphLayout(axes, nshards, g + (-g) % max(nshards, 1))
 
 
 def graph_shard_axes(mesh) -> Tuple[Tuple[str, ...], int]:

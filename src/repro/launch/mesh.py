@@ -24,6 +24,28 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def resolve_sampler_mesh(spec):
+    """Resolve a ``repro.api.SamplerConfig.mesh`` value to a Mesh (or None).
+
+    ``None`` -> unsharded; ``"auto"`` -> :func:`make_sampler_mesh` over all
+    local devices; ``"host"`` -> :func:`make_host_mesh`; an actual Mesh
+    object passes through untouched.  Resolution happens at session build
+    time, so a config is a plain picklable value until then.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        if spec == "auto":
+            return make_sampler_mesh()
+        if spec == "host":
+            return make_host_mesh()
+        raise ValueError(
+            f"unknown mesh spec {spec!r}: expected None, 'auto', 'host' "
+            "or a jax Mesh"
+        )
+    return spec
+
+
 def make_sampler_mesh(num_devices: int | None = None):
     """1D ``graphs`` mesh for the quilting sampler's B^2 iid block streams.
 

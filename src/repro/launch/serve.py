@@ -1,7 +1,18 @@
-"""Serving driver: prefill a prompt batch, then greedy-decode tokens.
+"""Serving driver: LM decode loop, or MAGM graph sampling as a service.
+
+LM mode (prefill a prompt batch, then greedy-decode tokens):
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Graph mode (--magm): build ONE MAGMSampler session from a SamplerConfig
+and serve repeated sample requests from it — the session owns the quilt
+plan, the compiled round programs and the key stream, so request latency
+is the warm amortized cost, and responses stream out in fixed-size edge
+chunks instead of one giant array:
+
+    PYTHONPATH=src python -m repro.launch.serve --magm --graph-d 12 \
+        --requests 4 --chunk-edges 16384 [--mesh]
 """
 
 from __future__ import annotations
@@ -12,20 +23,49 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
-from repro.models.model import build as build_model
-from repro.train import steps as steps_lib
+
+def serve_graphs(args) -> None:
+    from repro.api import MAGMSampler, SamplerConfig
+    from repro.configs.magm_paper import DEFAULT_MU, THETA_1
+    from repro.core import magm
+
+    d = args.graph_d
+    config = SamplerConfig(
+        params=magm.make_params(THETA_1, mu=DEFAULT_MU, d=d),
+        num_nodes=2**d,
+        attribute_key=jax.random.PRNGKey(args.seed),
+        mesh="auto" if args.mesh else None,
+    )
+    t0 = time.perf_counter()
+    sampler = MAGMSampler(config, key=jax.random.PRNGKey(args.seed + 1))
+    t_build = time.perf_counter() - t0
+    print(
+        f"[serve] session up in {t_build:.2f}s: n={sampler.n} "
+        f"B={sampler.plan.B} mesh={sampler.mesh}"
+    )
+
+    total = 0
+    for r in range(args.requests):
+        t0 = time.perf_counter()
+        nchunks = nedges = 0
+        for chunk in sampler.sample_stream(chunk_edges=args.chunk_edges):
+            nchunks += 1
+            nedges += chunk.shape[0]
+            assert chunk.shape[1] == 2 and chunk.min(initial=0) >= 0
+        dt = time.perf_counter() - t0
+        total += nedges
+        print(
+            f"[serve] request {r}: {nedges} edges in {nchunks} chunks, "
+            f"{dt:.3f}s ({nedges / max(dt, 1e-9):.0f} edges/s)"
+        )
+    assert total > 0, "served no edges"
+    print(f"[serve] OK ({total} edges over {args.requests} requests)")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_lm(args) -> None:
+    from repro import configs
+    from repro.models.model import build as build_model
+    from repro.train import steps as steps_lib
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     model = build_model(cfg)
@@ -65,6 +105,27 @@ def main() -> None:
     print("[serve] sample row:", toks[0].tolist())
     assert bool(jnp.isfinite(logits).all()), "non-finite prefill logits"
     print("[serve] OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--magm", action="store_true", help="serve MAGM graphs")
+    ap.add_argument("--graph-d", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 14)
+    ap.add_argument("--mesh", action="store_true", help="shard over devices")
+    args = ap.parse_args()
+
+    if args.magm:
+        serve_graphs(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":
