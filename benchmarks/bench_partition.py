@@ -37,6 +37,29 @@ def run(max_d: int = 16) -> None:
             f"B={b};log2n={d};bound_ok={b <= d}",
         )
 
+    # ball-dropping backend over the same fig5 sweep: per-call time and the
+    # proposals-per-edge cost factor B^2 m / (c^T P c) next to quilting's B
+    for d in range(8, min(max_d, QUILT_TIME_MAX_D) + 1):
+        n = 2**d
+        params = magm.make_params(THETA_1, 0.5, d)
+        F = np.asarray(
+            magm.sample_attributes(jax.random.PRNGKey(d * 10), n, params.mu)
+        )
+        sampler = MAGMSampler(
+            SamplerConfig(params=params, F=F, backend="balldrop")
+        )
+        t = time_call(
+            lambda sampler=sampler, d=d: sampler.sample(
+                jax.random.PRNGKey(5000 + d)
+            ),
+        )
+        plan = sampler.plan
+        emit(
+            f"balldrop_mu0.5_n{n}", t,
+            f"B={plan.B};cost={plan.bd_cost:.1f};"
+            f"mean_edges={plan.bd_mean:.0f}",
+        )
+
     # partition-size study continues past the timed range
     for d in range(min(max_d, QUILT_TIME_MAX_D) + 1, max_d + 1):
         n = 2**d

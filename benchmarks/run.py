@@ -56,7 +56,19 @@ def main() -> None:
         fn()
 
     if args.json:
+        import subprocess
+
         import jax
+
+        try:
+            git_rev = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                capture_output=True,
+                text=True,
+                timeout=30,
+            ).stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            git_rev = None
 
         record = {
             "schema": "qkg-bench-v1",
@@ -67,6 +79,7 @@ def main() -> None:
             "platform": platform.platform(),
             "jax": jax.__version__,
             "backend": jax.default_backend(),
+            "git_rev": git_rev,
             "rows": common.ROWS,
         }
         with open(args.json, "w") as f:

@@ -1,5 +1,6 @@
-"""Dry-run analysis: loop-aware HLO cost model and roofline derivation."""
+"""Dry-run analysis: loop-aware HLO cost model, roofline derivation, and
+the cross-backend statistical validation suite."""
 
-from repro.analysis import hlo_cost, roofline
+from repro.analysis import hlo_cost, roofline, validate
 
-__all__ = ["hlo_cost", "roofline"]
+__all__ = ["hlo_cost", "roofline", "validate"]

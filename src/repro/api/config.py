@@ -15,7 +15,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-VALID_BACKENDS = ("auto", "device", "host")
+VALID_BACKENDS = ("auto", "device", "host", "balldrop")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -33,7 +33,11 @@ class SamplerConfig:
         ``attribute_key`` (default PRNGKey(0)) at session build time.
     backend:
         "auto" (device pipeline when eligible, host fallback), "device",
-        or "host" (the PR-1 reference path).
+        "host" (the PR-1 reference path), or "balldrop" (the ball-dropping
+        sampler of arXiv:1202.6001, ``repro.core.balldrop``: edge-count
+        target first, one rejection-sampled ball per edge; statistically
+        equivalent to the quilting backends, cross-checked by the
+        validation suite).
     mesh:
         None (unsharded), "auto" (1D ``graphs`` mesh over all local
         devices), "host" (this process's data mesh), or a jax Mesh.
@@ -70,7 +74,7 @@ class SamplerConfig:
     >>> SamplerConfig(params=cfg.params, backend="gpu")
     Traceback (most recent call last):
         ...
-    ValueError: backend must be one of ('auto', 'device', 'host'), got 'gpu'
+    ValueError: backend must be one of ('auto', 'device', 'host', 'balldrop'), got 'gpu'
     """
 
     params: Any

@@ -128,6 +128,17 @@ class MAGMSampler(_Session):
             self.plan = self.split_plan.light_plan
         else:
             self.plan = quilt.build_quilt_plan(self.F, params.thetas)
+        if (
+            config.backend == "balldrop"
+            and self.plan is not None
+            and self.plan.bd_cost is None
+        ):
+            # fail at session build, not on the first sample() call
+            raise ValueError(
+                "backend='balldrop' needs the plan's ball-dropping "
+                f"moments, unavailable at d={self.plan.d} (2^d exceeds "
+                "kron.MOMENT_CAP); use backend='auto' or 'host'"
+            )
 
     # -- single sample -------------------------------------------------
 
@@ -285,12 +296,13 @@ class KPGMSampler(_Session):
         self.plan: Optional[quilt.QuiltPlan] = None
         if config.backend != "host" and self.n <= KPGM_PLAN_MAX_NODES:
             self.plan = quilt.build_kpgm_plan(params.thetas)
-        elif config.backend == "device":
+        elif config.backend in ("device", "balldrop"):
             # an explicit device request that cannot be honored must not
             # silently degrade to the host reference loop
             raise ValueError(
-                f"backend='device' needs n <= {KPGM_PLAN_MAX_NODES} "
-                f"(got n={self.n}); use backend='auto' or 'host'"
+                f"backend={config.backend!r} needs n <= "
+                f"{KPGM_PLAN_MAX_NODES} (got n={self.n}); use "
+                "backend='auto' or 'host'"
             )
 
     def _run(
@@ -353,10 +365,11 @@ class KPGMSampler(_Session):
         edges = run.edges()
         # stats=None when the engine itself fell back to its host path: its
         # targets draw was never used there, so reporting it would fabricate
-        # a target_edges the sample does not obey
+        # a target_edges the sample does not obey.  The balldrop host path
+        # DOES honor its target, so its stats stay.
         stats = (
             None
-            if run.host_edges is not None
+            if run.host_edges is not None and run.sampler != "balldrop"
             else KPGMStats(
                 num_nodes=self.n,
                 target_edges=int(run.targets[0]),

@@ -1,0 +1,439 @@
+"""Ball-dropping MAGM sampler (Moreno et al., arXiv:1202.6001) as a third
+backend over the quilting plan.
+
+Quilting (core/quilt.py) draws B^2 whole KPGM graphs and filters them down
+to the realized attribute matrix.  Ball dropping inverts the loop: draw the
+graph's EDGE COUNT up front, then place that many balls directly.  The
+adaptation to the Theorem-2 partition machinery is what makes one ball
+placement exact here:
+
+1. **Target** — |E| conditional on F is a sum of independent
+   Bernoulli(Q_ij), so one draw N ~ round(Normal(c^T P c, sqrt(Var))) with
+   the Kronecker quadratic forms of core/kron.py (precomputed on the
+   :class:`~repro.core.quilt.QuiltPlan` as ``bd_mean``/``bd_std``).
+2. **Proposal** — each ball is a plain quadrant descent (config pair
+   (x, y) with probability P_xy / m — the KPGM kernel path) plus two
+   uniform ranks (k, l) in [0, B)^2.
+3. **Rejection** — the ranks are mapped through the SAME per-block lookup
+   tables the quilt uses: block k contains configuration x iff its
+   multiplicity c_x >= k + 1, so the lookup hits with probability
+   c_x c_y / B^2 and an accepted ball lands on node pair (i, j) with
+   probability proportional to c_x c_y P_xy / (c_x c_y) = Q_ij exactly —
+   a lookup MISS is the rejection step, for free.
+4. **Dedup** — accepted balls stream through the segmented sort-based
+   dedup of core/dedup.py over NODE pairs (``valid=`` masks the misses),
+   with the same fixed-shape top-up rounds: round r's candidates are
+   [all prior rounds || fresh draws], so arrival-order semantics are exact
+   and only per-sample counts leave the device.
+
+The result is returned as a :class:`~repro.core.quilt.QuiltRun`
+(``sampler="balldrop"``, one dedup graph per sample), so sessions,
+``sample_stream``, ``sample_batch`` and bit-identical ``mesh=`` sharding
+are inherited unchanged from the quilting pipeline — here the mesh shards
+SAMPLES (each sample's stream is keyed by ``fold_in(fold_in(round_key, r),
+sample)``), which is layout-invariant for the same reason the quilt's
+block-pair sharding is.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map as _shard_map
+from repro.core import dedup, kpgm, kron, partition, quilt
+from repro.kernels import ops
+
+__all__ = ["balldrop_run", "DISPATCH_COUNTERS"]
+
+# fused dispatches of the ball-dropping rounds (analogous to
+# quilt.DISPATCH_COUNTERS; kept separate so the quilt's O(max_rounds)
+# dispatch-count tests are unaffected by balldrop runs)
+DISPATCH_COUNTERS = {
+    "device_rounds": 0,
+    "device_topup_rounds": 0,
+    "host_topup_rounds": 0,
+}
+
+
+def _bd_round_body(
+    rkey: jax.Array,
+    gids: jax.Array,
+    targets: jax.Array,
+    cum: jax.Array,
+    tables,
+    *,
+    rounds: Tuple[int, ...],
+    num_blocks: int,
+    node_bits: int,
+    use_kernel: bool,
+):
+    """Per-shard fused ball-dropping round over a chunk of samples.
+
+    Mirrors ``quilt._round_body`` with two twists: every candidate carries
+    its own uniform block ranks (kb, lb) ~ U[0, B)^2 (drawn from a sibling
+    fold of the same per-sample key as the descent uniforms), and the
+    segmented dedup runs over NODE pairs with the lookup misses masked out
+    via ``valid=`` — a miss is the rejection step, so only accepted balls
+    rank against the per-sample target.  Returns (snode, dnode, take,
+    counts); call under dedup.call_x64.
+    """
+    d = cum.shape[0]
+    gc = gids.shape[0]
+    uch, kch = [], []
+    for r, ask in enumerate(rounds):
+        kr = jax.random.fold_in(rkey, r)
+        gkeys = jax.vmap(lambda g, k=kr: jax.random.fold_in(k, g))(gids)
+        uch.append(
+            jax.vmap(
+                lambda k, a=ask: jax.random.uniform(
+                    jax.random.fold_in(k, 0), (a, d), dtype=jnp.float32
+                )
+            )(gkeys)
+        )
+        kch.append(
+            jax.vmap(
+                lambda k, a=ask: jax.random.randint(
+                    jax.random.fold_in(k, 1),
+                    (a, 2),
+                    0,
+                    num_blocks,
+                    dtype=jnp.int32,
+                )
+            )(gkeys)
+        )
+    u = uch[0] if len(uch) == 1 else jnp.concatenate(uch, axis=1)
+    kl = kch[0] if len(kch) == 1 else jnp.concatenate(kch, axis=1)
+    a_tot = u.shape[1]
+    u = u.reshape(gc * a_tot, d)
+    kl = kl.reshape(gc * a_tot, 2)
+    kb, lb = kl[:, 0], kl[:, 1]
+    if use_kernel:
+        table_cfg, table_node = tables
+        _, _, snode, dnode = ops.quilt_descent_lookup_pallas(
+            u, cum, kb, lb, table_cfg, table_node
+        )
+    else:
+        (inv,) = tables
+        scfg, dcfg = kpgm._descend(u, cum)
+        flat = inv.reshape(-1)
+        snode = flat[(kb << d) | scfg]
+        dnode = flat[(lb << d) | dcfg]
+    valid = (snode >= 0) & (dnode >= 0)
+    local = (jnp.arange(gc * a_tot, dtype=jnp.int32) // a_tot).astype(
+        jnp.int32
+    )
+    cum_asks = jnp.arange(1, gc + 1, dtype=jnp.int32) * a_tot
+    take, counts = dedup.segmented_unique_mask(
+        local, snode, dnode, cum_asks, targets,
+        node_bits=node_bits, valid=valid,
+    )
+    return snode, dnode, take, counts
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_bd_round(
+    mesh,
+    axes: Tuple[str, ...],
+    rounds: Tuple[int, ...],
+    num_blocks: int,
+    node_bits: int,
+    use_kernel: bool,
+    num_tables: int,
+):
+    """Jit (and, with a mesh, shard_map over the sample axis) one round."""
+    body = functools.partial(
+        _bd_round_body,
+        rounds=rounds,
+        num_blocks=num_blocks,
+        node_bits=node_bits,
+        use_kernel=use_kernel,
+    )
+    if mesh is not None:
+        spec = jax.sharding.PartitionSpec(axes)
+        rep = jax.sharding.PartitionSpec()
+        body = _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(rep, spec, spec, rep, (rep,) * num_tables),
+            out_specs=(spec,) * 4,
+            check_rep=False,
+        )
+    return jax.jit(body)
+
+
+def _node_bits(n: int) -> int:
+    return max(int(n - 1).bit_length(), 1) if n > 1 else 1
+
+
+def _propose_host(key, plan, ask: int):
+    """One host-side proposal batch: (snode, dnode) with -1 marking misses.
+
+    The distributional twin of the device round's proposal step (descent +
+    uniform ranks + per-block lookup), used by the host fallback and the
+    top-up; the per-block lookup loops over the B sorted tables instead of
+    the dense inverse.
+    """
+    part = plan.part
+    B = plan.B
+    uk, kk = jax.random.split(key)
+    scfg, dcfg = kpgm.sample_edge_batch(uk, plan.thetas, ask)
+    kl = np.asarray(
+        jax.random.randint(kk, (ask, 2), 0, B, dtype=jnp.int32)
+    )
+    scfg = np.asarray(scfg, dtype=np.int64)
+    dcfg = np.asarray(dcfg, dtype=np.int64)
+    sn = np.full(ask, -1, dtype=np.int64)
+    dn = np.full(ask, -1, dtype=np.int64)
+    for b in range(B):
+        m = kl[:, 0] == b
+        if m.any():
+            sn[m] = partition.lookup_nodes(
+                part.sorted_configs[b], part.sorted_nodes[b], scfg[m]
+            )
+        m = kl[:, 1] == b
+        if m.any():
+            dn[m] = partition.lookup_nodes(
+                part.sorted_configs[b], part.sorted_nodes[b], dcfg[m]
+            )
+    return sn, dn
+
+
+def _balldrop_sample_host(
+    key: jax.Array,
+    plan: quilt.QuiltPlan,
+    *,
+    target: int,
+    max_rounds: int,
+    oversample: float,
+) -> np.ndarray:
+    """Host fallback: the same rejection process as the device rounds, with
+    numpy arrival-order dedup (honors an explicit target, unlike the quilt
+    host reference path)."""
+    n = plan.n
+    target = min(int(target), n * n)
+    if target <= 0 or plan.B == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    seen = np.empty((0,), dtype=np.int64)
+    for _ in range(max_rounds):
+        need = target - seen.size
+        if need <= 0:
+            break
+        ask = dedup.bucket_size(
+            int(need * oversample * plan.bd_cost) + 16
+        )
+        ask = min(ask, kpgm.DEVICE_MAX_CANDIDATES)
+        key, sub = jax.random.split(key)
+        sn, dn = _propose_host(sub, plan, ask)
+        ok = (sn >= 0) & (dn >= 0)
+        flat = sn[ok] * n + dn[ok]
+        _, first_idx = np.unique(flat, return_index=True)
+        in_order = flat[np.sort(first_idx)]
+        fresh = in_order[~np.isin(in_order, seen, assume_unique=True)]
+        seen = np.concatenate([seen, fresh])
+    seen = seen[:target]
+    return np.stack([seen // n, seen % n], axis=1)
+
+
+def _host_balldrop_topup(
+    key: jax.Array,
+    plan: quilt.QuiltPlan,
+    targets: np.ndarray,
+    counts: np.ndarray,
+    seen_pairs: List[np.ndarray],
+    tail: List[Tuple[int, np.ndarray]],
+    max_rounds: int,
+    oversample: float,
+) -> np.ndarray:
+    """Finish a collision shortfall the device rounds left behind: shared
+    proposal batches, host arrival-order dedup against the node pairs taken
+    on device, (sample_id, (E, 2)) pieces appended to ``tail``."""
+    n = plan.n
+    for _ in range(max_rounds):
+        needs = targets - counts
+        if needs.max(initial=0) <= 0:
+            break
+        asks, batch = dedup.plan_asks(needs, oversample * plan.bd_cost)
+        key, sub = jax.random.split(key)
+        sn, dn = _propose_host(sub, plan, batch)
+        DISPATCH_COUNTERS["host_topup_rounds"] += 1
+        ok = (sn >= 0) & (dn >= 0)
+        flat_all = np.where(ok, sn * n + dn, -1)
+        off = 0
+        for g, ask in enumerate(np.asarray(asks)):
+            if ask == 0:
+                continue
+            chunk = flat_all[off : off + int(ask)]
+            off += int(ask)
+            chunk = chunk[chunk >= 0]
+            _, first_idx = np.unique(chunk, return_index=True)
+            in_order = chunk[np.sort(first_idx)]
+            fresh = in_order[~np.isin(in_order, seen_pairs[g])]
+            fresh = fresh[: int(needs[g])]
+            if fresh.size == 0:
+                continue
+            seen_pairs[g] = np.concatenate([seen_pairs[g], fresh])
+            counts[g] += fresh.size
+            tail.append(
+                (g, np.stack([fresh // n, fresh % n], axis=1))
+            )
+    return counts
+
+
+def balldrop_run(
+    key: jax.Array,
+    plan: quilt.QuiltPlan,
+    *,
+    num_samples: int = 1,
+    targets: Optional[np.ndarray] = None,
+    max_rounds: int = 8,
+    oversample: float = 1.05,
+    use_kernel: Optional[bool] = None,
+    mesh=None,
+) -> quilt.QuiltRun:
+    """Execute the ball-dropping engine for a prebuilt QuiltPlan.
+
+    The ``backend="balldrop"`` arm of :func:`repro.core.quilt.quilt_run`:
+    same signature contract, but ``targets`` is per SAMPLE (one node-pair
+    stream each) instead of per block pair, defaulting to independent
+    N(bd_mean, bd_std) draws.  Raises :class:`ValueError` when the plan was
+    built past the ``kron.MOMENT_CAP`` gate (no ball-dropping moments), and
+    :class:`quilt.DeviceBatchUnavailable` for fused batches over the device
+    candidate budget.
+    """
+    S = int(num_samples)
+    n = plan.n
+    if plan.bd_cost is None:
+        raise ValueError(
+            "backend='balldrop' needs the plan's ball-dropping moments; "
+            f"this plan was built without them (2^d > {kron.MOMENT_CAP}"
+            " configurations, or an empty partition)"
+        )
+
+    key, sub = jax.random.split(key)
+    if targets is None:
+        draws = (
+            np.asarray(jax.random.normal(sub, (S,))) * plan.bd_std
+            + plan.bd_mean
+        )
+        targets = np.clip(np.round(draws), 0, n * n).astype(np.int64)
+    else:
+        targets = np.clip(
+            np.asarray(targets, dtype=np.int64).reshape(S), 0, n * n
+        )
+    total = int(targets.sum())
+
+    if use_kernel is None:
+        use_kernel = not ops.INTERPRET
+    if plan.inv is None and not use_kernel:
+        use_kernel = True
+
+    from repro.dist import sharding as _dist_sharding
+
+    layout = _dist_sharding.graph_layout(mesh, S)
+    axes, s_pad = layout.axes, layout.padded
+    if not axes:
+        mesh = None
+    ask0 = dedup.uniform_ask(targets, oversample * plan.bd_cost)
+    # layout-invariant device decision, like quilt_run's (S, not s_pad)
+    use_device = S * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
+    if not use_device:
+        if S > 1:
+            raise quilt.DeviceBatchUnavailable(
+                "fused balldrop sample_batch over the device budget "
+                f"(candidates={S * ask0})"
+            )
+        edges = _balldrop_sample_host(
+            key,
+            plan,
+            target=int(targets[0]),
+            max_rounds=max_rounds,
+            oversample=oversample,
+        )
+        st = quilt.QuiltStats(
+            B=plan.B,
+            num_kpgm_draws=0,
+            kpgm_edges_total=int(edges.shape[0]),
+            kept_edges=int(edges.shape[0]),
+            heavy_groups=0,
+            light_nodes=plan.n,
+            bprime=None,
+        )
+        return quilt.QuiltRun(
+            plan, 1, targets, np.zeros(S, np.int64), None, None, None,
+            0, (), edges, st, sampler="balldrop",
+        )
+
+    tail: List[Tuple[int, np.ndarray]] = []
+    counts = np.zeros(S, dtype=np.int64)
+    shortfall = targets.copy()
+    outs = None
+    key, rkey = jax.random.split(key)
+    a_tot = 0
+    nb = _node_bits(n)
+
+    if total > 0:
+        gids = np.zeros(s_pad, dtype=np.int32)
+        gids[:S] = np.arange(S, dtype=np.int32)
+        tpad = np.zeros(s_pad, dtype=np.int32)
+        tpad[:S] = targets
+        gids_j = jnp.asarray(gids)
+        tpad_j = jnp.asarray(tpad)
+        tables = (
+            (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
+        )
+        rounds: Tuple[int, ...] = ()
+        for r in range(max_rounds):
+            ask = dedup.uniform_ask(shortfall, oversample * plan.bd_cost)
+            if ask == 0:
+                break
+            if rounds and S * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
+                # cumulative stream would outgrow the device budget: let
+                # the host top-up finish the residual (layout-invariant,
+                # like quilt_run's guard)
+                break
+            rounds = rounds + (ask,)
+            fn = _compiled_bd_round(
+                mesh, axes, rounds, plan.B, nb, use_kernel, len(tables)
+            )
+            outs = dedup.call_x64(
+                fn, rkey, gids_j, tpad_j, plan.cum, tables
+            )
+            DISPATCH_COUNTERS[
+                "device_rounds" if r == 0 else "device_topup_rounds"
+            ] += 1
+            counts = np.asarray(outs[3]).astype(np.int64)[:S]
+            shortfall = targets - counts
+            if shortfall.max(initial=0) <= 0:
+                break
+        a_tot = sum(rounds)
+
+    keep = None
+    snode = dnode = None
+    if outs is not None:
+        snode, dnode, take, _ = outs
+        # the dedup's valid mask already excludes lookup misses, so taken
+        # rows are accepted balls: keep == take (and counts == keep sums)
+        keep = np.asarray(take)
+        if shortfall.max(initial=0) > 0:
+            flat_taken = (
+                np.asarray(snode)[keep].astype(np.int64) * n
+                + np.asarray(dnode)[keep].astype(np.int64)
+            )
+            full_counts = np.asarray(outs[3]).astype(np.int64)
+            seen_pairs = list(
+                np.split(flat_taken, np.cumsum(full_counts)[:-1])
+            )[:S]
+            counts = _host_balldrop_topup(
+                key, plan, targets, counts, seen_pairs, tail,
+                max_rounds, oversample,
+            )
+
+    return quilt.QuiltRun(
+        plan, S, targets, counts, snode, dnode, keep, a_tot, tuple(tail),
+        None, None, sampler="balldrop",
+    )

@@ -40,7 +40,7 @@ the packed keys, nothing else).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +234,7 @@ def segmented_unique_mask(
     targets: jax.Array,
     *,
     node_bits: int,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Per-graph first-occurrence mask with arrival-order target capping.
 
@@ -243,9 +244,22 @@ def segmented_unique_mask(
     Returns ``(take, counts)``: ``take[i]`` marks candidate i as one of the
     first ``targets[g]`` distinct ``(src, dst)`` pairs of its graph in stream
     order, and ``counts[g] = take[graph_id == g].sum()``.
+
+    ``valid`` (optional bool mask) excludes rejected candidates — e.g. the
+    ball-dropping backend's per-block lookup misses — from both the distinct
+    ranking and the output: invalid rows are remapped to an out-of-range
+    sentinel pair before packing (one extra bit per node id, so their
+    ``src``/``dst`` values, -1 included, never collide with real edges) and
+    are never fresh, so the per-graph target is filled by valid pairs only.
     """
     n = src.shape[0]
     num_graphs = targets.shape[0]
+    if valid is not None:
+        # sentinel > any real node id; needs node_bits + 1 per id to pack
+        sentinel = jnp.int32(1) << node_bits
+        src = jnp.where(valid, src.astype(jnp.int32), sentinel)
+        dst = jnp.where(valid, dst.astype(jnp.int32), sentinel)
+        node_bits = node_bits + 1
     _, abits, fits = _packed_bits(node_bits, num_graphs, n)
     arrival = jnp.arange(n, dtype=jnp.int64)
 
@@ -284,6 +298,8 @@ def segmented_unique_mask(
     # (arrival values are unique, so this is an exact inverse permutation)
     restore = jnp.sort((arr_sorted.astype(jnp.int32) << 1) | first)
     fresh = (restore & 1) > 0
+    if valid is not None:
+        fresh = fresh & valid
 
     c = jnp.cumsum(fresh.astype(jnp.int32))
     ends = jnp.maximum(cum_asks - 1, 0)

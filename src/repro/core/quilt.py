@@ -78,7 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import shard_map as _shard_map
-from repro.core import dedup, kpgm, magm, partition
+from repro.core import dedup, kpgm, kron, magm, partition
 from repro.kernels import ops
 
 
@@ -134,6 +134,12 @@ class QuiltPlan(NamedTuple):
     inv: Optional[jax.Array]  # (B, 2^d) dense inverse or None
     mean_edges: float  # E|E| of one KPGM draw
     std_edges: float  # sqrt(m - v)
+    # conditional-on-F MAGM |E| moments (c^T P c quadratic forms, kron.py)
+    # and the ball-dropping proposals-per-edge factor; None past the
+    # kron.MOMENT_CAP gate, in which case backend="balldrop" is unavailable
+    bd_mean: Optional[float] = None
+    bd_std: Optional[float] = None
+    bd_cost: Optional[float] = None
 
     @property
     def num_graphs(self) -> int:
@@ -203,6 +209,11 @@ def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
     th_dev = jnp.asarray(th)
     cum = kpgm._level_cumprobs(th_dev)
     m, v = kpgm.edge_moments(th_dev)
+    bd_mean = bd_std = bd_cost = None
+    if part.B and (1 << d) <= kron.MOMENT_CAP:
+        c = kron.config_multiplicities(part, d)
+        bd_mean, bd_std = kron.edge_count_moments(c, th)
+        bd_cost = kron.balldrop_cost_factor(float(m), part.B, bd_mean)
     plan = QuiltPlan(
         n=n,
         d=d,
@@ -215,6 +226,9 @@ def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
         inv=jnp.asarray(inv_np) if inv_np is not None else None,
         mean_edges=float(m),
         std_edges=float(jnp.sqrt(jnp.maximum(m - v, 0.0))),
+        bd_mean=bd_mean,
+        bd_std=bd_std,
+        bd_cost=bd_cost,
     )
     PLAN_STATS["plan_builds"] += 1
     return plan
@@ -285,6 +299,10 @@ def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
     if cached_part is None:
         cached_part = _partition_state(F, F.shape[1])
         _cache_put(_PART_CACHE, fkey, cached_part)
+    else:
+        # true LRU: a HIT must refresh recency too, or the hottest
+        # partition is the first evicted once the cache fills
+        _PART_CACHE.move_to_end(fkey)
     plan = _assemble_plan(F, th, cached_part)
     _cache_put(_PLAN_CACHE, (fkey, tkey), plan)
     return plan
@@ -426,6 +444,11 @@ class QuiltRun(NamedTuple):
     the pathological host top-up fallback, appended after the device edges
     in insertion order; ``host_edges``/``host_stats`` are set instead of the
     device fields when the run took the host backend.
+
+    ``sampler`` records which engine produced the run: ``"quilt"`` (B^2
+    block-pair graphs per sample) or ``"balldrop"`` (one node-pair stream
+    per sample, core/balldrop.py); the per-sample splits and stats key off
+    it to know how many dedup graphs one sample spans.
     """
 
     plan: QuiltPlan
@@ -439,6 +462,13 @@ class QuiltRun(NamedTuple):
     tail: Tuple[Tuple[int, np.ndarray], ...]
     host_edges: Optional[np.ndarray]
     host_stats: Optional[QuiltStats]
+    sampler: str = "quilt"
+
+    @property
+    def graphs_per_sample(self) -> int:
+        """Dedup graphs one sample spans (B^2 block pairs, or one
+        node-pair stream for the ball-dropping backend)."""
+        return 1 if self.sampler == "balldrop" else self.plan.num_graphs
 
     def kept_edges(self) -> int:
         if self.host_edges is not None:
@@ -492,7 +522,7 @@ class QuiltRun(NamedTuple):
         """Split the kept edges of a fused batch back into per-sample
         (E_s, 2) arrays (candidate order is sample-major, so each sample's
         edges are contiguous)."""
-        G = self.plan.num_graphs
+        G = self.graphs_per_sample
         S = self.num_samples
         if self.host_edges is not None:
             return [self.host_edges]
@@ -520,7 +550,8 @@ class QuiltRun(NamedTuple):
             return self.host_stats
         return QuiltStats(
             B=self.plan.B,
-            num_kpgm_draws=self.plan.num_graphs,
+            # the ball-dropping backend never draws whole KPGM graphs
+            num_kpgm_draws=0 if self.sampler == "balldrop" else self.plan.num_graphs,
             kpgm_edges_total=int(self.counts.sum()),
             kept_edges=self.kept_edges() if kept is None else int(kept),
             heavy_groups=0,
@@ -531,12 +562,12 @@ class QuiltRun(NamedTuple):
     def stats_per_sample(
         self, kept_sizes: List[int]
     ) -> List[QuiltStats]:
-        G = self.plan.num_graphs
+        G = self.graphs_per_sample
         csum = self.counts.reshape(self.num_samples, G).sum(axis=1)
         return [
             QuiltStats(
                 B=self.plan.B,
-                num_kpgm_draws=G,
+                num_kpgm_draws=0 if self.sampler == "balldrop" else G,
                 kpgm_edges_total=int(csum[s]),
                 kept_edges=int(kept_sizes[s]),
                 heavy_groups=0,
@@ -569,7 +600,25 @@ def quilt_run(
     backend decision resolves to host.  ``targets`` overrides the per-graph
     Normal(m, m - v) edge-count draw (the key is split identically either
     way, so the candidate streams don't depend on the override).
+
+    ``backend="balldrop"`` dispatches to the ball-dropping engine
+    (core/balldrop.py, arXiv:1202.6001): same plan, same QuiltRun surface,
+    but one node-pair candidate stream per sample (targets are per SAMPLE
+    there, not per block pair).
     """
+    if backend == "balldrop":
+        from repro.core import balldrop  # lazy: balldrop imports this module
+
+        return balldrop.balldrop_run(
+            key,
+            plan,
+            num_samples=num_samples,
+            targets=targets,
+            max_rounds=max_rounds,
+            oversample=oversample,
+            use_kernel=use_kernel,
+            mesh=mesh,
+        )
     S = int(num_samples)
     G = plan.num_graphs
     gtot = S * G
@@ -911,12 +960,18 @@ def choose_bprime(
 ) -> Tuple[int, float]:
     """Minimise T(B') = B'^2 log(n) |E| + (|W| + d) R + d R^2 over candidate B'.
 
-    ``counts`` are the multiplicities of the distinct configurations.  Only the
-    distinct multiplicity values are candidates (step changes happen there).
+    ``counts`` are the multiplicities of the distinct configurations.  The
+    cost is a step function of B' that only changes at the distinct
+    multiplicity values, so the candidates are those values plus B' = 0
+    (every configuration heavy, empty light part) — without the 0 candidate
+    an all-heavy optimum below ``min(counts)`` could never be chosen.  Empty
+    ``counts`` (no nodes / no configurations) degenerates to (0, 0.0).
     """
-    counts = np.sort(np.asarray(counts))
+    counts = np.sort(np.asarray(counts, dtype=np.int64).reshape(-1))
+    if counts.size == 0:
+        return 0, 0.0
     log_n = max(np.log2(max(n, 2)), 1.0)
-    cands = np.unique(counts)
+    cands = np.concatenate([[0], np.unique(counts)])
     best_bp, best_t = int(counts.max()), float("inf")
     for bp in cands:
         heavy = counts > bp
@@ -1048,12 +1103,18 @@ def rng_from_key(key: jax.Array) -> np.random.Generator:
     The Section-5 split sampler draws its Erdos-Renyi blocks with numpy
     (binomial counts + distinct-cell placement); deriving the generator
     from the SAME key that drives the quilted light part gives the sampler
-    the one-key contract of every other entry point."""
+    the one-key contract of every other entry point.
+
+    Raw ``PRNGKey`` uint32 arrays are canonicalized to typed keys up front,
+    so both representations of the same key run the identical fold + data
+    extraction path and yield the identical generator (pinned by test) —
+    rather than relying on ``jax.random.key_data`` happening to accept raw
+    arrays in the installed jax version."""
+    arr = jnp.asarray(key)
+    if not jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        key = jax.random.wrap_key_data(arr.astype(jnp.uint32))
     sub = jax.random.fold_in(key, 0x5EED)
-    try:
-        data = jax.random.key_data(sub)
-    except (TypeError, ValueError, AttributeError):
-        data = sub
+    data = jax.random.key_data(sub)
     entropy = [int(x) for x in np.asarray(data, dtype=np.uint32).ravel()]
     return np.random.default_rng(entropy)
 

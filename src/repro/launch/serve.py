@@ -24,6 +24,25 @@ import jax
 import jax.numpy as jnp
 
 
+def _validate_chunk(chunk, n: int) -> None:
+    """Reject malformed streamed chunks loudly.
+
+    The old check (``chunk.min(initial=0) >= 0``) was vacuous: with zero
+    rows ``min(initial=0)`` IS 0, so an empty or even float chunk sailed
+    through.  Streamed chunks must be non-empty (the stream contract emits
+    no zero-row chunks), integer, (E, 2), and in ``[0, n)``.
+    """
+    if chunk.ndim != 2 or chunk.shape[1] != 2:
+        raise AssertionError(f"chunk shape {chunk.shape}, want (E, 2)")
+    if chunk.shape[0] == 0:
+        raise AssertionError("stream emitted an empty chunk")
+    if chunk.dtype.kind not in "iu":
+        raise AssertionError(f"chunk dtype {chunk.dtype}, want integer")
+    lo, hi = int(chunk.min()), int(chunk.max())
+    if lo < 0 or hi >= n:
+        raise AssertionError(f"edge ids [{lo}, {hi}] outside [0, {n})")
+
+
 def serve_graphs(args) -> None:
     from repro.api import MAGMSampler, SamplerConfig
     from repro.configs.magm_paper import DEFAULT_MU, THETA_1
@@ -44,22 +63,32 @@ def serve_graphs(args) -> None:
         f"B={sampler.plan.B} mesh={sampler.mesh}"
     )
 
-    total = 0
+    total = empty = 0
     for r in range(args.requests):
         t0 = time.perf_counter()
         nchunks = nedges = 0
         for chunk in sampler.sample_stream(chunk_edges=args.chunk_edges):
+            _validate_chunk(chunk, sampler.n)
             nchunks += 1
             nedges += chunk.shape[0]
-            assert chunk.shape[1] == 2 and chunk.min(initial=0) >= 0
         dt = time.perf_counter() - t0
         total += nedges
-        print(
-            f"[serve] request {r}: {nedges} edges in {nchunks} chunks, "
-            f"{dt:.3f}s ({nedges / max(dt, 1e-9):.0f} edges/s)"
-        )
-    assert total > 0, "served no edges"
-    print(f"[serve] OK ({total} edges over {args.requests} requests)")
+        if nedges == 0:
+            # a 0-edge draw is a legal sample (the |E| target can be 0),
+            # not a silent "0 chunks" — say so explicitly
+            empty += 1
+            print(f"[serve] request {r}: EMPTY sample (0 edges), {dt:.3f}s")
+        else:
+            print(
+                f"[serve] request {r}: {nedges} edges in {nchunks} chunks, "
+                f"{dt:.3f}s ({nedges / max(dt, 1e-9):.0f} edges/s)"
+            )
+    if total == 0:
+        print(f"[serve] WARNING: all {args.requests} requests were empty")
+    print(
+        f"[serve] OK ({total} edges over {args.requests} requests, "
+        f"{empty} empty)"
+    )
 
 
 def serve_lm(args) -> None:

@@ -147,3 +147,109 @@ def test_dedup_edges_keeps_first_arrivals():
     # already-unique streams come back untouched, in order
     uniq = np.array([[5, 5], [1, 9], [0, 0]])
     np.testing.assert_array_equal(dedup.dedup_edges(uniq), uniq)
+
+
+# ---------------------------------------------------------------------------
+# boundary coverage: rechunk / chunk iteration / ask planning / valid mask
+# ---------------------------------------------------------------------------
+
+
+def test_rechunk_edges_boundaries():
+    pieces = [np.arange(10).reshape(5, 2)]
+    # chunk_edges=1: one row per chunk, order preserved
+    chunks = list(dedup.rechunk_edges(pieces, 1))
+    assert [c.shape for c in chunks] == [(1, 2)] * 5
+    np.testing.assert_array_equal(np.concatenate(chunks), pieces[0])
+    # chunk_edges >= total: a single short chunk
+    chunks = list(dedup.rechunk_edges(pieces, 100))
+    assert len(chunks) == 1
+    np.testing.assert_array_equal(chunks[0], pieces[0])
+    # chunk_edges == total exactly: one full chunk, no trailing empty
+    chunks = list(dedup.rechunk_edges(pieces, 5))
+    assert [c.shape for c in chunks] == [(5, 2)]
+    # all-empty pieces: nothing yielded (not a zero-row chunk)
+    assert list(dedup.rechunk_edges([np.zeros((0, 2))] * 3, 4)) == []
+    assert list(dedup.rechunk_edges([], 4)) == []
+    # empty pieces interleaved: invisible in the output
+    inter = [np.zeros((0, 2)), pieces[0][:2], np.zeros((0, 2)), pieces[0][2:]]
+    np.testing.assert_array_equal(
+        np.concatenate(list(dedup.rechunk_edges(inter, 2))), pieces[0]
+    )
+    with pytest.raises(ValueError, match="chunk_edges"):
+        list(dedup.rechunk_edges(pieces, 0))
+    with pytest.raises(ValueError, match="chunk_edges"):
+        list(dedup.rechunk_edges(pieces, -3))
+
+
+def test_iter_edge_chunks_boundaries():
+    src = np.array([5, 6, 7, 8], dtype=np.int64)
+    dst = np.array([1, 2, 3, 4], dtype=np.int64)
+    keep = np.array([True, False, True, True])
+    want = np.array([[5, 1], [7, 3], [8, 4]])
+    # chunk_edges=1 and chunk_edges >= kept rows
+    for ce, shapes in [(1, [(1, 2)] * 3), (64, [(3, 2)])]:
+        chunks = list(dedup.iter_edge_chunks(src, dst, keep, ce))
+        assert [c.shape for c in chunks] == shapes
+        np.testing.assert_array_equal(np.concatenate(chunks), want)
+    # nothing kept, no tail: empty stream
+    assert list(dedup.iter_edge_chunks(src, dst, np.zeros(4, bool), 8)) == []
+    # tail-only emission (host top-up with zero device keeps)
+    tail = [np.array([[9, 9], [2, 2]])]
+    chunks = list(
+        dedup.iter_edge_chunks(src, dst, np.zeros(4, bool), 8, tail=tail)
+    )
+    np.testing.assert_array_equal(np.concatenate(chunks), tail[0])
+    # device keeps + tail append in emission order
+    chunks = list(dedup.iter_edge_chunks(src, dst, keep, 2, tail=tail))
+    np.testing.assert_array_equal(
+        np.concatenate(chunks), np.concatenate([want, tail[0]])
+    )
+
+
+def test_uniform_ask_all_zero_needs():
+    """No graph needs anything -> 0 slots (not bucket_size(16))."""
+    assert dedup.uniform_ask(np.zeros(5, np.int64), 1.5) == 0
+    assert dedup.uniform_ask(np.array([-3, 0, -1]), 2.0) == 0  # clamped
+    assert dedup.uniform_ask(np.array([]), 1.5) == 0
+    # one positive need still gets the +16 margin and bucketing
+    assert dedup.uniform_ask(np.array([0, 4, 0]), 1.0) >= 20
+
+
+def test_valid_mask_excludes_rejected_candidates():
+    """segmented_unique_mask(valid=...): invalid rows are never taken and
+    never shadow a later valid copy of the same pair; valid=None is
+    bit-identical to the pre-existing behaviour."""
+    import jax.numpy as jnp
+
+    asks = np.array([6, 4], dtype=np.int32)
+    # graph 0: invalid (3,3) first, then valid (3,3) -> the VALID copy wins
+    src = np.array([3, 3, 0, 0, 1, 2, 5, 5, -1, 4], dtype=np.int32)
+    dst = np.array([3, 3, 0, 0, 1, 0, 5, 5, -1, 4], dtype=np.int32)
+    valid = np.array([0, 1, 1, 1, 1, 0, 1, 1, 0, 1], dtype=bool)
+    targets = np.array([10, 10], dtype=np.int32)
+    gid = np.repeat(np.arange(2), asks).astype(np.int32)
+    cum = np.cumsum(asks).astype(np.int32)
+
+    def run(valid_arg):
+        take, counts = dedup.call_x64(
+            dedup.segmented_unique_mask,
+            jnp.asarray(gid),
+            jnp.asarray(src),
+            jnp.asarray(dst),
+            jnp.asarray(cum),
+            jnp.asarray(targets),
+            node_bits=4,
+            valid=valid_arg,
+        )
+        return np.asarray(take), np.asarray(counts)
+
+    take, counts = run(jnp.asarray(valid))
+    np.testing.assert_array_equal(
+        take, [False, True, True, False, True, False, True, False, False, True]
+    )
+    np.testing.assert_array_equal(counts, [3, 2])
+    # valid=None path unchanged: matches the host reference exactly
+    take0, counts0 = run(None)
+    tref, cref = dedup.host_unique_reference(src, dst, asks, targets)
+    np.testing.assert_array_equal(take0, tref)
+    np.testing.assert_array_equal(counts0, cref)

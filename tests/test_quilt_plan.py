@@ -121,3 +121,70 @@ def test_empty_and_tiny_inputs(mu):
     _, F1 = _attrs(1, 4, mu=mu, seed=1)
     e1, st = quilt.quilt_sample(jax.random.PRNGKey(1), params, F1, return_stats=True)
     assert st.B == 1 and e1.shape[1] == 2
+
+
+def test_choose_bprime_pinned_hand_example():
+    """T(B') pinned on a hand-computable example.
+
+    counts=[1,1,4], n=8, d=2, |E|=4: log2(8)=3, so
+      B'=0: t = 0 + (0+2)*3 + 2*9      = 24
+      B'=1: t = 1*3*4 + (2+2)*1 + 2*1  = 18   <- optimum
+      B'=4: t = 16*3*4 + (6+2)*0 + 0   = 192
+    """
+    assert quilt.choose_bprime([1, 1, 4], 8, 2, 4.0) == (1, 18.0)
+
+
+def test_choose_bprime_all_heavy_candidate():
+    """B'=0 (every config heavy) must be considered: with one huge config
+    and many expected edges, ER-sampling the single heavy block (t=2) beats
+    any quilting threshold.  The pre-fix code never looked below
+    min(counts) and returned B'=9."""
+    bp, t = quilt.choose_bprime([9], 16, 1, 100.0)
+    assert (bp, t) == (0, 2.0)
+
+
+def test_choose_bprime_empty_counts():
+    """No configurations (n=0) must not crash (np.max on empty did)."""
+    assert quilt.choose_bprime([], 4, 2, 1.0) == (0, 0.0)
+
+
+def test_part_cache_hit_refreshes_lru_recency():
+    """A _PART_CACHE HIT must refresh recency: before the fix a hit left
+    the entry at its insertion slot, so the hottest partition was the
+    first evicted once the cache filled."""
+    thetas = [
+        magm.make_params(
+            np.array([[0.2 + 0.05 * i, 0.6], [0.6, 0.9]], np.float32), 0.5, 4
+        ).thetas
+        for i in range(3)
+    ]
+    Fs = [_attrs(16, 4, seed=100 + i)[1] for i in range(quilt._CACHE_MAX + 1)]
+    quilt.clear_plan_cache()
+    for F in Fs[: quilt._CACHE_MAX]:  # fill the cache, Fs[0] oldest
+        quilt.get_quilt_plan(F, thetas[0])
+    builds = quilt.PLAN_STATS["partition_builds"]
+    # partition HIT for Fs[0] via fresh thetas (plan cache misses)
+    quilt.get_quilt_plan(Fs[0], thetas[1])
+    assert quilt.PLAN_STATS["partition_builds"] == builds
+    # one new F evicts the LRU entry — which must now be Fs[1], not Fs[0]
+    quilt.get_quilt_plan(Fs[quilt._CACHE_MAX], thetas[0])
+    quilt.get_quilt_plan(Fs[0], thetas[2])
+    assert quilt.PLAN_STATS["partition_builds"] == builds + 1  # only Fs[8]
+    quilt.get_quilt_plan(Fs[1], thetas[1])  # evicted: rebuilds
+    assert quilt.PLAN_STATS["partition_builds"] == builds + 2
+
+
+def test_rng_from_key_typed_and_raw_agree():
+    """Typed keys and raw uint32 PRNGKey arrays are the same key: the
+    derived numpy generators must emit identical streams, and repeated
+    derivation must be deterministic."""
+    typed = jax.random.key(42)
+    raw = jax.random.PRNGKey(42)  # uint32 (2,) representation of the same
+    a = quilt.rng_from_key(typed).integers(0, 1 << 30, size=8)
+    b = quilt.rng_from_key(raw).integers(0, 1 << 30, size=8)
+    c = quilt.rng_from_key(raw).integers(0, 1 << 30, size=8)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b, c)
+    # a different key gives a different stream (the fold-in is not a no-op)
+    d = quilt.rng_from_key(jax.random.PRNGKey(43)).integers(0, 1 << 30, size=8)
+    assert not np.array_equal(a, d)

@@ -101,3 +101,24 @@ def test_serve_generates_tokens():
         )
     assert tok.shape == (2,)
     assert bool(jnp.isfinite(lg).all())
+
+
+def test_serve_chunk_validation_rejects_malformed():
+    """The serving driver's chunk check must actually bite: the old
+    ``chunk.min(initial=0) >= 0`` accepted empty and float chunks."""
+    import pytest
+
+    from repro.launch.serve import _validate_chunk
+
+    good = np.array([[0, 3], [7, 1]], dtype=np.int64)
+    _validate_chunk(good, n=8)  # in-bounds integer (E, 2): accepted
+    with pytest.raises(AssertionError, match="empty"):
+        _validate_chunk(np.zeros((0, 2), dtype=np.int64), n=8)
+    with pytest.raises(AssertionError, match="dtype"):
+        _validate_chunk(good.astype(np.float64), n=8)
+    with pytest.raises(AssertionError, match="outside"):
+        _validate_chunk(good, n=7)  # node 7 out of range
+    with pytest.raises(AssertionError, match="outside"):
+        _validate_chunk(np.array([[-1, 2]], dtype=np.int64), n=8)
+    with pytest.raises(AssertionError, match="shape"):
+        _validate_chunk(np.array([[1, 2, 3]], dtype=np.int64), n=8)
