@@ -1,0 +1,91 @@
+"""Serving benchmarks: warm request throughput, tail latency, and overload
+shedding through :class:`repro.launch.serve.GraphServer`.
+
+Rows (the serving side of the BENCH schema):
+
+- ``serve_request_d<D>``   — mean wall per accepted request, sequential
+                             load; derived carries requests/s.
+- ``serve_p50_d<D>`` / ``serve_p99_d<D>`` — latency percentiles of the
+                             accepted requests (queue wait + service).
+- ``serve_overload_d<D>``  — mean wall per request under a burst of
+                             4x the queue bound; derived carries the shed
+                             rate (shed/submitted) and accepted p99 —
+                             the load-shedding contract: p99 stays at
+                             queue-depth x service, arrivals shed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+
+def _sampler(d: int):
+    from repro.api import MAGMSampler, SamplerConfig
+    from repro.core import magm
+
+    config = SamplerConfig(
+        params=magm.make_params(common.THETA_2, mu=0.5, d=d),
+        num_nodes=2**d,
+        attribute_key=jax.random.PRNGKey(0),
+    )
+    return MAGMSampler(config, key=jax.random.PRNGKey(1))
+
+
+def run(d: int = 9, requests: int = 16) -> None:
+    from repro.launch.serve import GraphServer
+
+    sampler = _sampler(d)
+    chunk_edges = 1 << 12
+
+    # -- warm sequential load: throughput + tails -----------------------
+    with GraphServer(sampler, max_queue=requests, chunk_edges=chunk_edges) as srv:
+        srv.submit(key=jax.random.PRNGKey(99)).result()  # warm compile
+        t0 = time.perf_counter()
+        futures = [
+            srv.submit(key=jax.random.PRNGKey(i)) for i in range(requests)
+        ]
+        responses = [f.result() for f in futures]
+        wall = time.perf_counter() - t0
+    ok = [r for r in responses if r.ok]
+    lat = np.sort([r.wait_s + r.service_s for r in ok])
+    edges = sum(int(r.edges.shape[0]) for r in ok)
+    common.emit(
+        f"serve_request_d{d}",
+        wall / max(len(ok), 1),
+        f"{len(ok) / wall:.1f} req/s; {edges / wall:.0f} edges/s",
+    )
+    common.emit(
+        f"serve_p50_d{d}", float(lat[len(lat) // 2]), f"n={len(ok)}"
+    )
+    common.emit(
+        f"serve_p99_d{d}",
+        float(lat[min(len(lat) - 1, int(0.99 * len(lat)))]),
+        f"n={len(ok)}",
+    )
+
+    # -- overload burst: shedding keeps the accepted tail bounded -------
+    max_queue = 2
+    burst = 4 * (max_queue + 1) * 2
+    with GraphServer(sampler, max_queue=max_queue, chunk_edges=chunk_edges) as srv:
+        srv.submit(key=jax.random.PRNGKey(99)).result()
+        t0 = time.perf_counter()
+        futures = [
+            srv.submit(key=jax.random.PRNGKey(i)) for i in range(burst)
+        ]
+        responses = [f.result() for f in futures]
+        wall = time.perf_counter() - t0
+        stats = dict(srv.stats)
+    ok = [r for r in responses if r.ok]
+    shed_rate = stats["shed"] / max(stats["submitted"] - 1, 1)
+    lat = np.sort([r.wait_s + r.service_s for r in ok]) if ok else np.zeros(1)
+    common.emit(
+        f"serve_overload_d{d}",
+        wall / burst,
+        f"shed_rate={shed_rate:.2f}; accepted_p99_us="
+        f"{lat[min(len(lat) - 1, int(0.99 * len(lat)))] * 1e6:.0f}",
+    )

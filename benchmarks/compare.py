@@ -50,6 +50,7 @@ MODULE_PREFIXES = (
     ("fig14", "d"),
     ("kernel", "kernels"),
     ("balldrop", "partition"),
+    ("serve", "serve"),
 )
 
 

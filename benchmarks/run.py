@@ -7,7 +7,8 @@ with ``--json OUT``, writes the same rows as a JSON trajectory point so the
 perf history accumulates across PRs (CI runs ``--fast --json``).
 Figure map: bench_partition (Figs 5-7), bench_properties (Figs 8-9),
 bench_scalability (Figs 10-11), bench_mu (Figs 12-13), bench_d (Fig 14),
-bench_kernels (Pallas kernel rooflines).
+bench_kernels (Pallas kernel rooflines), bench_serve (GraphServer
+throughput / tail latency / overload shedding).
 """
 
 import argparse
@@ -36,6 +37,7 @@ def main() -> None:
         bench_partition,
         bench_properties,
         bench_scalability,
+        bench_serve,
         common,
     )
 
@@ -47,6 +49,9 @@ def main() -> None:
         "mu": lambda: bench_mu.run(ds=(10,) if args.fast else (10, 12)),
         "d": lambda: bench_d.run(log_n=10 if args.fast else 12),
         "kernels": bench_kernels.run,
+        "serve": lambda: bench_serve.run(
+            d=8 if args.fast else 10, requests=8 if args.fast else 16
+        ),
     }
     t0 = time.time()
     for name, fn in suites.items():

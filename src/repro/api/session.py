@@ -36,6 +36,7 @@ import numpy as np
 from repro.api.config import SamplerConfig
 from repro.api.result import GraphSample, KPGMStats
 from repro.core import dedup, kpgm, magm, quilt
+from repro.dist import chaos, checkpoint as _ckpt
 
 # identity plans materialize the 2^d config space; past this the host
 # reference path is the only sane KPGM backend
@@ -70,6 +71,106 @@ class _Session:
 
     def _cast(self, edges: np.ndarray) -> np.ndarray:
         return edges.astype(self.config.dtype, copy=False)
+
+    # -- resumable streaming (shared) ----------------------------------
+
+    def _digest_parts(self) -> list:
+        """Stream-identity config parts (see _stream_config_digest)."""
+        raise NotImplementedError
+
+    def _stream_raw(
+        self, key, chunk_edges: int, num_edges: Optional[int] = None
+    ) -> Iterator[np.ndarray]:
+        raise NotImplementedError
+
+    def _stream_config_digest(
+        self, chunk_edges: int, num_edges: Optional[int]
+    ) -> np.ndarray:
+        """Digest of everything the chunk sequence depends on — EXCEPT the
+        mesh: layout invariance (per-graph ``fold_in`` keys, shared slot
+        counts) means a stream checkpointed on one device layout resumes
+        bit-identically on any other, including a degraded one."""
+        from repro.api import stream as _stream
+
+        c = self.config
+        return _stream.digest_parts(
+            [
+                type(self).__name__,
+                *self._digest_parts(),
+                c.backend,
+                c.oversample,
+                c.max_rounds,
+                c.use_kernel,
+                str(np.dtype(c.dtype)),
+                int(chunk_edges),
+                None if num_edges is None else int(num_edges),
+            ]
+        )
+
+    def _checkpointed_stream(
+        self,
+        key,
+        chunk_edges: int,
+        checkpoint_dir: str,
+        num_edges: Optional[int] = None,
+    ) -> Iterator[np.ndarray]:
+        from repro.api import stream as _stream
+
+        state = _stream.initial_state(
+            self._stream_config_digest(chunk_edges, num_edges),
+            key,
+            chunk_edges,
+            num_edges,
+        )
+        return _stream.emit(
+            self._stream_raw(key, chunk_edges, num_edges=num_edges),
+            checkpoint_dir,
+            state,
+            slots=lambda: getattr(self, "_last_run_slots", 0),
+        )
+
+    def resume_stream(self, checkpoint_dir: str) -> Iterator[np.ndarray]:
+        """Continue a checkpointed ``sample_stream`` after an interruption.
+
+        Loads the newest StreamCheckpoint under ``checkpoint_dir``, re-runs
+        the deterministic engine from the persisted key, digest-verifies
+        the replay of the chunks already delivered, and yields the rest —
+        the concatenation [chunks delivered before the fault ‖ resumed
+        chunks] is bit-identical to an uninterrupted run (pinned by test).
+        Resume is valid on ANY mesh (including a degraded one): the
+        config digest deliberately excludes device layout.  Raises
+        ValueError when the directory holds no checkpoint or one written
+        by a different sampler config; a finished stream yields nothing.
+        """
+        from repro.api import stream as _stream
+
+        step = _ckpt.latest_step(checkpoint_dir)
+        if step is None:
+            raise ValueError(
+                f"no stream checkpoint under {checkpoint_dir!r}"
+            )
+        state = _stream.load_state(checkpoint_dir, step, self._key)
+        chunk_edges = int(state["chunk_edges"])
+        num_edges_i = int(state["num_edges"])
+        num_edges = None if num_edges_i < 0 else num_edges_i
+        mine = self._stream_config_digest(chunk_edges, num_edges)
+        if not np.array_equal(mine, state["config_digest"]):
+            raise ValueError(
+                f"stream checkpoint in {checkpoint_dir!r} was written by a "
+                "different sampler config (config digest mismatch); build "
+                "the session from the original config to resume"
+            )
+        if int(state["done"]):
+            return iter(())
+        key = _stream.key_from_data(
+            state["key_data"], int(state["key_typed"])
+        )
+        return _stream.emit(
+            self._stream_raw(key, chunk_edges, num_edges=num_edges),
+            checkpoint_dir,
+            state,
+            slots=lambda: getattr(self, "_last_run_slots", 0),
+        )
 
 
 class MAGMSampler(_Session):
@@ -189,11 +290,33 @@ class MAGMSampler(_Session):
 
     # -- streaming -----------------------------------------------------
 
+    def _digest_parts(self) -> list:
+        return [self.F, self.config.split, self.config.bprime]
+
+    def _stream_raw(
+        self, key, chunk_edges: int, num_edges: Optional[int] = None
+    ) -> Iterator[np.ndarray]:
+        """The undecorated chunk sequence (``num_edges`` unused here —
+        the MAGM edge count is always the model's own draw)."""
+        if self.F.size == 0:
+            return
+        if self.split_plan is not None:
+            edges, _ = self._split_sample(key)
+            chunks = dedup.rechunk_edges([edges], chunk_edges)
+        else:
+            run = self._run(key)
+            self._last_run_slots = run.slots_per_graph
+            chunks = run.iter_chunks(chunk_edges)
+        for chunk in chunks:
+            chaos.maybe_fail("stream.chunk")
+            yield self._cast(chunk)
+
     def sample_stream(
         self,
         key: Optional[jax.Array] = None,
         *,
         chunk_edges: int = 1 << 16,
+        checkpoint_dir: Optional[str] = None,
     ) -> Iterator[np.ndarray]:
         """Draw one graph, emitted as fixed-size deduped edge chunks.
 
@@ -205,18 +328,19 @@ class MAGMSampler(_Session):
         (writers, per-host partial lists) stream it instead.  The
         Section-5 split path materializes per-piece (its ER blocks are
         host-side) and only re-chunks.
+
+        ``checkpoint_dir=`` persists a small StreamCheckpoint (atomically,
+        via ``repro.dist.checkpoint``) after every delivered chunk; a run
+        killed mid-stream then continues bit-identically from the cursor
+        via :meth:`resume_stream` — on any mesh (see repro.api.stream).
         """
         key = self._next_key() if key is None else key
-        if self.F.size == 0:
-            return
-        if self.split_plan is not None:
-            edges, _ = self._split_sample(key)
-            for chunk in dedup.rechunk_edges([edges], chunk_edges):
-                yield self._cast(chunk)
-            return
-        run = self._run(key)
-        for chunk in run.iter_chunks(chunk_edges):
-            yield self._cast(chunk)
+        if checkpoint_dir is None:
+            yield from self._stream_raw(key, chunk_edges)
+        else:
+            yield from self._checkpointed_stream(
+                key, chunk_edges, checkpoint_dir
+            )
 
     # -- batching ------------------------------------------------------
 
@@ -378,23 +502,41 @@ class KPGMSampler(_Session):
         )
         return GraphSample(self._cast(edges), self.n, stats, key)
 
+    def _digest_parts(self) -> list:
+        return [np.asarray(self.params.thetas), self.n]
+
+    def _stream_raw(
+        self, key, chunk_edges: int, num_edges: Optional[int] = None
+    ) -> Iterator[np.ndarray]:
+        run = self._engine_run(key, num_edges)
+        if run is None:
+            gs = self._host_sample(key, num_edges)
+            chunks = dedup.rechunk_edges([gs.edges], chunk_edges)
+        else:
+            self._last_run_slots = run.slots_per_graph
+            chunks = run.iter_chunks(chunk_edges)
+        for chunk in chunks:
+            chaos.maybe_fail("stream.chunk")
+            yield self._cast(chunk)
+
     def sample_stream(
         self,
         key: Optional[jax.Array] = None,
         *,
         chunk_edges: int = 1 << 16,
         num_edges: Optional[int] = None,
+        checkpoint_dir: Optional[str] = None,
     ) -> Iterator[np.ndarray]:
-        """One KPGM graph as fixed-size chunks (see MAGMSampler)."""
+        """One KPGM graph as fixed-size chunks (see MAGMSampler; the
+        ``checkpoint_dir=`` / :meth:`resume_stream` resume contract —
+        including the ``num_edges`` override — is shared)."""
         key = self._next_key() if key is None else key
-        run = self._engine_run(key, num_edges)
-        if run is None:
-            gs = self._host_sample(key, num_edges)
-            for chunk in dedup.rechunk_edges([gs.edges], chunk_edges):
-                yield self._cast(chunk)
-            return
-        for chunk in run.iter_chunks(chunk_edges):
-            yield self._cast(chunk)
+        if checkpoint_dir is None:
+            yield from self._stream_raw(key, chunk_edges, num_edges)
+        else:
+            yield from self._checkpointed_stream(
+                key, chunk_edges, checkpoint_dir, num_edges=num_edges
+            )
 
     def sample_batch(
         self, num_graphs: int, key: Optional[jax.Array] = None

@@ -38,6 +38,7 @@ block-pair sharding is.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -46,6 +47,7 @@ import numpy as np
 
 from repro.compat import shard_map as _shard_map
 from repro.core import dedup, kpgm, kron, partition, quilt
+from repro.dist import chaos
 from repro.kernels import ops
 
 __all__ = ["balldrop_run", "DISPATCH_COUNTERS"]
@@ -57,6 +59,8 @@ DISPATCH_COUNTERS = {
     "device_rounds": 0,
     "device_topup_rounds": 0,
     "host_topup_rounds": 0,
+    "mesh_degrades": 0,
+    "degraded_fallbacks": 0,
 }
 
 
@@ -377,17 +381,13 @@ def balldrop_run(
     nb = _node_bits(n)
 
     if total > 0:
-        gids = np.zeros(s_pad, dtype=np.int32)
-        gids[:S] = np.arange(S, dtype=np.int32)
-        tpad = np.zeros(s_pad, dtype=np.int32)
-        tpad[:S] = targets
-        gids_j = jnp.asarray(gids)
-        tpad_j = jnp.asarray(tpad)
+        gids_j, tpad_j = quilt._pad_inputs(S, s_pad, targets)
         tables = (
             (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
         )
         rounds: Tuple[int, ...] = ()
         for r in range(max_rounds):
+            chaos.maybe_fail("quilt.round")
             ask = dedup.uniform_ask(shortfall, oversample * plan.bd_cost)
             if ask == 0:
                 break
@@ -397,12 +397,24 @@ def balldrop_run(
                 # like quilt_run's guard)
                 break
             rounds = rounds + (ask,)
-            fn = _compiled_bd_round(
-                mesh, axes, rounds, plan.B, nb, use_kernel, len(tables)
-            )
-            outs = dedup.call_x64(
-                fn, rkey, gids_j, tpad_j, plan.cum, tables
-            )
+            while True:
+                try:
+                    chaos.maybe_fail("quilt.dispatch")
+                    fn = _compiled_bd_round(
+                        mesh, axes, rounds, plan.B, nb, use_kernel,
+                        len(tables),
+                    )
+                    outs = dedup.call_x64(
+                        fn, rkey, gids_j, tpad_j, plan.cum, tables
+                    )
+                    break
+                except chaos.DeviceLoss as exc:
+                    # same degrade-and-rerun recovery as quilt_run: the
+                    # per-sample streams are layout-invariant too
+                    mesh, axes, s_pad = quilt._degrade_layout(
+                        mesh, exc, S, DISPATCH_COUNTERS
+                    )
+                    gids_j, tpad_j = quilt._pad_inputs(S, s_pad, targets)
             DISPATCH_COUNTERS[
                 "device_rounds" if r == 0 else "device_topup_rounds"
             ] += 1
@@ -420,6 +432,16 @@ def balldrop_run(
         # rows are accepted balls: keep == take (and counts == keep sums)
         keep = np.asarray(take)
         if shortfall.max(initial=0) > 0:
+            DISPATCH_COUNTERS["degraded_fallbacks"] += 1
+            warnings.warn(
+                f"device rounds exhausted (max_rounds={max_rounds}, "
+                f"{a_tot} slots/sample) with {int(shortfall.sum())} edges "
+                "still short: finishing the residual with the host "
+                "ball-dropping loop (raise max_rounds or oversample to "
+                "stay device-resident)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
             flat_taken = (
                 np.asarray(snode)[keep].astype(np.int64) * n
                 + np.asarray(dnode)[keep].astype(np.int64)

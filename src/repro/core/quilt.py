@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.compat import shard_map as _shard_map
 from repro.core import dedup, kpgm, kron, magm, partition
+from repro.dist import chaos
 from repro.kernels import ops
 
 
@@ -314,12 +315,59 @@ def get_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
 
 # one fused dispatch per round (first round + on-device top-ups) + the final
 # gather; tests assert the total stays O(max_rounds), independent of B^2, and
-# that host_topup_rounds stays 0 on the default backend
+# that host_topup_rounds stays 0 on the default backend.  mesh_degrades
+# counts dispatch-time device losses recovered by rebuilding the mesh over
+# the survivors; degraded_fallbacks counts max_rounds-exhausted runs that
+# fell through to the host top-up loop (both also warn — degradation is
+# observable, never silent)
 DISPATCH_COUNTERS = {
     "device_rounds": 0,
     "device_topup_rounds": 0,
     "host_topup_rounds": 0,
+    "mesh_degrades": 0,
+    "degraded_fallbacks": 0,
 }
+
+
+def _pad_inputs(gtot: int, g_pad: int, targets: np.ndarray):
+    """(gids, targets) padded to ``g_pad`` as device arrays; padding rows
+    carry gid 0 / target 0, so they never emit."""
+    gids = np.zeros(g_pad, dtype=np.int32)
+    gids[:gtot] = np.arange(gtot, dtype=np.int32)
+    tpad = np.zeros(g_pad, dtype=np.int32)
+    tpad[:gtot] = targets
+    return jnp.asarray(gids), jnp.asarray(tpad)
+
+
+def _degrade_layout(mesh, exc: "chaos.DeviceLoss", gtot: int, counters=None):
+    """Recover from a dispatch-time device loss: survivors mesh + layout.
+
+    Returns ``(mesh, axes, g_pad)`` for the degraded mesh.  Re-raises the
+    original fault when recovery is impossible (no mesh to shrink, or no
+    surviving device).  The re-run is bit-identical on the smaller mesh —
+    per-graph ``fold_in`` keys and shared slot counts mean no per-graph
+    stream ever depended on the device layout (Theorem 4 invariance), and
+    a changed pad size only adds zero-target rows that emit nothing.
+    """
+    if mesh is None:
+        raise exc
+    from repro.dist import sharding as _dist_sharding
+    from repro.launch import mesh as _launch_mesh
+
+    try:
+        new_mesh = _launch_mesh.degrade_sampler_mesh(mesh, exc.device)
+    except ValueError:
+        raise exc from None
+    layout = _dist_sharding.graph_layout(new_mesh, gtot)
+    (DISPATCH_COUNTERS if counters is None else counters)["mesh_degrades"] += 1
+    warnings.warn(
+        f"device {exc.device} lost mid-dispatch: rebuilt the sampler mesh "
+        f"over {layout.nshards} surviving device(s) and re-running the "
+        "round (layout invariance keeps the edges bit-identical)",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+    return new_mesh, layout.axes, layout.padded
 
 
 def _round_body(
@@ -696,17 +744,13 @@ def quilt_run(
     a_tot = 0
 
     if total > 0:
-        gids = np.zeros(g_pad, dtype=np.int32)
-        gids[:gtot] = np.arange(gtot, dtype=np.int32)
-        tpad = np.zeros(g_pad, dtype=np.int32)
-        tpad[:gtot] = targets
-        gids_j = jnp.asarray(gids)
-        tpad_j = jnp.asarray(tpad)
+        gids_j, tpad_j = _pad_inputs(gtot, g_pad, targets)
         tables = (
             (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
         )
         rounds: Tuple[int, ...] = ()
         for r in range(max_rounds):
+            chaos.maybe_fail("quilt.round")
             ask = dedup.uniform_ask(shortfall, oversample)
             if ask == 0:
                 break
@@ -722,10 +766,22 @@ def quilt_run(
             # segmented dedup on-device, nothing returns to the host but the
             # per-graph counts
             rounds = rounds + (ask,)
-            fn = _compiled_round(
-                mesh, axes, rounds, plan.B, use_kernel, len(tables)
-            )
-            outs = dedup.call_x64(fn, rkey, gids_j, tpad_j, plan.cum, tables)
+            while True:
+                try:
+                    chaos.maybe_fail("quilt.dispatch")
+                    fn = _compiled_round(
+                        mesh, axes, rounds, plan.B, use_kernel, len(tables)
+                    )
+                    outs = dedup.call_x64(
+                        fn, rkey, gids_j, tpad_j, plan.cum, tables
+                    )
+                    break
+                except chaos.DeviceLoss as exc:
+                    # the device is gone — retrying the same program fails
+                    # identically, so rebuild over the survivors and re-run
+                    # the round (bit-exact, see _degrade_layout)
+                    mesh, axes, g_pad = _degrade_layout(mesh, exc, gtot)
+                    gids_j, tpad_j = _pad_inputs(gtot, g_pad, targets)
             DISPATCH_COUNTERS[
                 "device_rounds" if r == 0 else "device_topup_rounds"
             ] += 1
@@ -743,6 +799,16 @@ def quilt_run(
         if shortfall.max(initial=0) > 0:
             # pathological: max_rounds device rounds still short — fall back
             # to the PR-1 host rejection loop for the residual
+            DISPATCH_COUNTERS["degraded_fallbacks"] += 1
+            warnings.warn(
+                f"device rounds exhausted (max_rounds={max_rounds}, "
+                f"{a_tot} slots/graph) with {int(shortfall.sum())} edges "
+                "still short: finishing the residual with the host "
+                "rejection loop (raise max_rounds or oversample to stay "
+                "device-resident)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
             take_h = np.asarray(take)
             flat_taken = (
                 np.asarray(scfg)[take_h].astype(np.int64) * ncfg

@@ -12,11 +12,13 @@ Layering (bottom up):
                     1-device host mesh.
 - ``collectives`` — int8 stochastic-rounding gradient compression for the
                     slow inter-pod links.
+- ``chaos``       — deterministic fault injection (seeded FaultSchedule at
+                    named runtime sites) + typed retry combinators.
 - ``checkpoint``  — atomic step_N checkpoints with shape-checked restore and
                     elastic (resharding) restore.
 - ``fault``       — crash-restart training supervision + straggler detection.
 """
 
-from repro.dist import checkpoint, collectives, fault, hints, sharding
+from repro.dist import chaos, checkpoint, collectives, fault, hints, sharding
 
-__all__ = ["checkpoint", "collectives", "fault", "hints", "sharding"]
+__all__ = ["chaos", "checkpoint", "collectives", "fault", "hints", "sharding"]

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.dist import chaos
+
 _PREFIX = "step_"
 
 
@@ -68,6 +70,7 @@ def _recover(directory: str) -> None:
 
 def save(directory: str, step: int, tree: Any) -> str:
     """Atomically write ``tree`` as checkpoint ``step``; returns its path."""
+    chaos.maybe_fail("checkpoint.write")
     leaves, _ = jax.tree.flatten(tree)
     final = _step_dir(directory, step)
     tmp = final + ".tmp"
@@ -84,6 +87,7 @@ def save(directory: str, step: int, tree: Any) -> str:
             f.write(arr.tobytes())
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+    chaos.maybe_fail("checkpoint.rename")
     # never a window without a complete checkpoint at this step: move the
     # old dir ASIDE (not rmtree) so a crash between renames still leaves
     # either the old or the new copy restorable

@@ -24,9 +24,10 @@ import numpy as np
 
 from repro.dist import checkpoint
 
-
-class InjectedFault(RuntimeError):
-    """A simulated node failure (tests / chaos drills)."""
+# Canonical definitions live in repro.dist.chaos (the bottom of the dist
+# dependency stack); re-exported here so existing `fault.InjectedFault`
+# call sites keep the same class identity.
+from repro.dist.chaos import DeviceLoss, InjectedFault  # noqa: F401
 
 
 class TrainSupervisor:
@@ -41,6 +42,9 @@ class TrainSupervisor:
         injection point for chaos tests.
       max_restarts: give up (re-raise) after this many recoveries.
       keep: checkpoints retained (older ones are pruned as training runs).
+      straggler_monitor: optional :class:`StragglerMonitor`; each step runs
+        under ``monitor.timed`` so slow steps are flagged (and the
+        monitor's ``on_straggler`` callbacks fire) as training runs.
     """
 
     def __init__(
@@ -54,6 +58,7 @@ class TrainSupervisor:
         max_restarts: int = 8,
         keep: int = 4,
         recoverable: Tuple[type, ...] = (InjectedFault,),
+        straggler_monitor: Optional["StragglerMonitor"] = None,
     ) -> None:
         self.step_fn = step_fn
         self.batch_fn = batch_fn
@@ -63,6 +68,7 @@ class TrainSupervisor:
         self.max_restarts = max_restarts
         self.keep = keep
         self.recoverable = recoverable
+        self.straggler_monitor = straggler_monitor
         self.restarts = 0
 
     def run(
@@ -83,7 +89,15 @@ class TrainSupervisor:
                 if self.fault_hook is not None:
                     self.fault_hook(step)
                 batch = self.batch_fn(step)
-                params, opt_state, m = self.step_fn(params, opt_state, batch)
+                if self.straggler_monitor is not None:
+                    params, opt_state, m = self.straggler_monitor.timed(
+                        step,
+                        lambda: self.step_fn(params, opt_state, batch),
+                    )
+                else:
+                    params, opt_state, m = self.step_fn(
+                        params, opt_state, batch
+                    )
                 metrics.append(
                     {"step": step, **{k: float(v) for k, v in m.items()}}
                 )
@@ -119,6 +133,12 @@ class StragglerMonitor:
     the last ``window`` observations.  Flagged durations still enter the
     window, so a genuine sustained slowdown shifts the baseline instead of
     flagging forever.
+
+    Action policies plug in via :meth:`on_straggler`: registered callbacks
+    are invoked with ``(step, seconds, median)`` each time a step is
+    flagged — the hook a scheduler uses to evict or rebalance the slow
+    host.  A callback that raises propagates to the caller of ``observe``
+    (an eviction policy MAY abort the step).
     """
 
     def __init__(
@@ -128,9 +148,19 @@ class StragglerMonitor:
         self.min_history = min_history
         self._durations: collections.deque = collections.deque(maxlen=window)
         self.flagged: List[Dict[str, float]] = []
+        self._callbacks: List[Callable[[int, float, float], Any]] = []
+
+    def on_straggler(
+        self, callback: Callable[[int, float, float], Any]
+    ) -> Callable[[int, float, float], Any]:
+        """Register ``callback(step, seconds, median)`` to fire on each
+        flagged step.  Returns the callback (usable as a decorator)."""
+        self._callbacks.append(callback)
+        return callback
 
     def observe(self, step: int, seconds: float) -> bool:
         is_straggler = False
+        median = None
         if len(self._durations) >= self.min_history:
             median = float(np.median(self._durations))
             if seconds > self.factor * median:
@@ -139,6 +169,9 @@ class StragglerMonitor:
                     {"step": step, "seconds": seconds, "median": median}
                 )
         self._durations.append(seconds)
+        if is_straggler:
+            for cb in self._callbacks:
+                cb(step, seconds, median)
         return is_straggler
 
     def timed(self, step: int, fn: Callable[[], Any]) -> Any:

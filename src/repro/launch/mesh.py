@@ -7,6 +7,7 @@ Kept as FUNCTIONS so importing this module never touches jax device state
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -44,6 +45,31 @@ def resolve_sampler_mesh(spec):
             "or a jax Mesh"
         )
     return spec
+
+
+def degrade_sampler_mesh(mesh, lost: int):
+    """Rebuild a sampler mesh over the devices that survive losing one.
+
+    ``lost`` indexes the dead device in ``mesh``'s flattened device list
+    (``repro.dist.chaos.DeviceLoss.device``).  Whatever axes the source
+    mesh had, the result is the canonical 1D ``graphs`` sampler mesh over
+    the survivors: the quilting engine re-runs the failed round on it, and
+    Theorem-4 layout invariance (per-graph ``fold_in`` keys + shared slot
+    counts) makes the re-run bit-identical to the undegraded dispatch.
+
+    Raises ValueError when ``lost`` is out of range or no device survives
+    (a 1-device mesh cannot degrade — the caller falls back or re-raises).
+    """
+    devices = list(np.asarray(mesh.devices).reshape(-1))
+    if not 0 <= int(lost) < len(devices):
+        raise ValueError(
+            f"lost device index {lost} out of range for a "
+            f"{len(devices)}-device mesh"
+        )
+    survivors = devices[: int(lost)] + devices[int(lost) + 1 :]
+    if not survivors:
+        raise ValueError("cannot degrade a 1-device mesh: no survivors")
+    return jax.sharding.Mesh(np.asarray(survivors), ("graphs",))
 
 
 def make_sampler_mesh(num_devices: int | None = None):

@@ -5,23 +5,42 @@ LM mode (prefill a prompt batch, then greedy-decode tokens):
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
-Graph mode (--magm): build ONE MAGMSampler session from a SamplerConfig
-and serve repeated sample requests from it — the session owns the quilt
-plan, the compiled round programs and the key stream, so request latency
-is the warm amortized cost, and responses stream out in fixed-size edge
-chunks instead of one giant array:
+Graph mode (--magm): build ONE sampler session and serve sample requests
+from it through :class:`GraphServer` — a bounded-in-flight-queue service
+with per-request deadlines, typed error responses and
+retry-after-transient-fault, so the session's warm amortized latency is
+what requests actually see and overload degrades into explicit shedding
+instead of unbounded queue delay:
 
     PYTHONPATH=src python -m repro.launch.serve --magm --graph-d 12 \
-        --requests 4 --chunk-edges 16384 [--mesh]
+        --requests 4 --chunk-edges 16384 [--mesh] \
+        [--max-queue 8] [--deadline-s 30]
+
+Response contract (``ServeResponse``): every request — well-formed or
+garbage — gets exactly one typed response; the server loop never dies on
+a request's account.  ``status``/``code`` pairs:
+
+    ok                 0    edges attached
+    bad_request      400    malformed payload (message says what)
+    deadline_exceeded 408   deadline passed before service finished
+    overloaded       429    in-flight queue full — request shed at submit
+    error            500    fault survived the retry policy
 """
 
 from __future__ import annotations
 
 import argparse
+import queue
+import threading
 import time
+from concurrent.futures import Future
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import chaos
 
 
 def _validate_chunk(chunk, n: int) -> None:
@@ -41,6 +60,309 @@ def _validate_chunk(chunk, n: int) -> None:
     lo, hi = int(chunk.min()), int(chunk.max())
     if lo < 0 or hi >= n:
         raise AssertionError(f"edge ids [{lo}, {hi}] outside [0, {n})")
+
+
+class ServeResponse(NamedTuple):
+    """One typed answer per request; ``edges`` only on ``status == "ok"``."""
+
+    status: str  # ok | bad_request | deadline_exceeded | overloaded | error
+    code: int  # 0 | 400 | 408 | 429 | 500
+    message: str = ""
+    edges: Optional[np.ndarray] = None
+    chunks: int = 0
+    wait_s: float = 0.0  # submit -> service start (queue delay)
+    service_s: float = 0.0  # sampling wall time
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class _Request(NamedTuple):
+    future: Future
+    key: Optional[Any]
+    chunk_edges: int
+    num_edges: Optional[int]
+    t_submit: float
+    t_deadline: Optional[float]
+
+
+class GraphServer:
+    """Bounded-queue sampling service over one sampler session.
+
+    One worker thread drains a ``Queue(maxsize=max_queue)`` of requests
+    against the (single-threaded, dispatch-owning) session.  The three
+    resilience behaviours the paper-scale service needs:
+
+    - **Load-shedding**: a submit against a full queue gets an immediate
+      typed ``overloaded`` response instead of a slot — so the p99 of the
+      requests the server DOES accept is bounded by
+      ``(max_queue + 1) x max service time``, never by arrival rate.
+    - **Deadlines**: each request carries a deadline (per-request
+      ``deadline_s`` or the server default); one that expires while
+      queued is answered ``deadline_exceeded`` without sampling, and the
+      retry loop inherits the remaining budget.
+    - **Retry-after-fault**: each service attempt passes the
+      ``serve.request`` chaos site and runs under ``retry_policy``
+      (transient :class:`repro.dist.chaos.InjectedFault` dispatches are
+      retried with backoff; exhaustion or a fatal fault returns a typed
+      ``error`` response).  The worker loop survives every response.
+
+    ``stats`` counts submitted/accepted/shed/completed/deadline_expired/
+    errors/retries.  Use as a context manager, or call :meth:`close`.
+    """
+
+    def __init__(
+        self,
+        sampler,
+        *,
+        max_queue: int = 8,
+        deadline_s: Optional[float] = None,
+        chunk_edges: int = 1 << 14,
+        retry_policy: Optional[chaos.RetryPolicy] = None,
+    ) -> None:
+        self.sampler = sampler
+        self.chunk_edges = int(chunk_edges)
+        self.deadline_s = deadline_s
+        self.retry_policy = (
+            retry_policy
+            if retry_policy is not None
+            else chaos.RetryPolicy(max_attempts=3, base_delay=0.01)
+        )
+        self._q: "queue.Queue[Optional[_Request]]" = queue.Queue(
+            maxsize=max(int(max_queue), 1)
+        )
+        self.stats: Dict[str, int] = {
+            "submitted": 0,
+            "accepted": 0,
+            "shed": 0,
+            "completed": 0,
+            "deadline_expired": 0,
+            "errors": 0,
+            "retries": 0,
+        }
+        self._lock = threading.Lock()
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._drain, name="graph-server", daemon=True
+        )
+        self._worker.start()
+
+    # -- submission ----------------------------------------------------
+
+    def _bump(self, stat: str, by: int = 1) -> None:
+        with self._lock:
+            self.stats[stat] += by
+
+    def _resolved(self, resp: ServeResponse) -> Future:
+        f: Future = Future()
+        f.set_result(resp)
+        return f
+
+    def submit(
+        self,
+        *,
+        key=None,
+        chunk_edges: Optional[int] = None,
+        num_edges: Optional[int] = None,
+        deadline_s: Optional[float] = None,
+    ) -> Future:
+        """Enqueue one sample request; always returns a Future holding a
+        :class:`ServeResponse` (shed/invalid requests resolve at once)."""
+        self._bump("submitted")
+        if self._closed:
+            return self._resolved(
+                ServeResponse("error", 500, "server is closed")
+            )
+        ce = self.chunk_edges if chunk_edges is None else chunk_edges
+        dl = self.deadline_s if deadline_s is None else deadline_s
+        try:
+            ce = int(ce)
+            if ce <= 0:
+                raise ValueError(f"chunk_edges must be positive, got {ce}")
+            if num_edges is not None:
+                num_edges = int(num_edges)
+                if num_edges < 0:
+                    raise ValueError(
+                        f"num_edges must be >= 0, got {num_edges}"
+                    )
+                if not hasattr(self.sampler, "params"):
+                    raise ValueError(
+                        "num_edges override is only valid for KPGM "
+                        "sessions (the MAGM edge count is the model's "
+                        "own draw)"
+                    )
+            if dl is not None:
+                dl = float(dl)
+                if dl <= 0:
+                    raise ValueError(
+                        f"deadline_s must be positive, got {dl}"
+                    )
+        except (TypeError, ValueError) as exc:
+            return self._resolved(ServeResponse("bad_request", 400, str(exc)))
+        now = time.monotonic()
+        req = _Request(
+            Future(), key, ce, num_edges, now,
+            None if dl is None else now + dl,
+        )
+        try:
+            self._q.put_nowait(req)
+        except queue.Full:
+            self._bump("shed")
+            return self._resolved(
+                ServeResponse(
+                    "overloaded",
+                    429,
+                    f"in-flight queue full ({self._q.maxsize}); retry later",
+                )
+            )
+        self._bump("accepted")
+        return req.future
+
+    def handle(self, payload) -> Future:
+        """Dict-payload front door (the HTTP-shaped surface): parse
+        ``{"kind": "sample", "seed"/"chunk_edges"/"num_edges"/
+        "deadline_s": ...}`` and submit.  Garbage payloads of any shape
+        resolve to typed ``bad_request`` responses — never an escaped
+        exception, so one bad client cannot kill the loop."""
+        if not isinstance(payload, dict):
+            return self._resolved(
+                ServeResponse(
+                    "bad_request", 400,
+                    f"payload must be a dict, got {type(payload).__name__}",
+                )
+            )
+        known = {"kind", "seed", "chunk_edges", "num_edges", "deadline_s"}
+        unknown = set(payload) - known
+        if unknown:
+            return self._resolved(
+                ServeResponse(
+                    "bad_request", 400,
+                    f"unknown field(s) {sorted(unknown)}; known: "
+                    f"{sorted(known)}",
+                )
+            )
+        kind = payload.get("kind", "sample")
+        if kind != "sample":
+            return self._resolved(
+                ServeResponse(
+                    "bad_request", 400, f"unknown kind {kind!r}"
+                )
+            )
+        key = None
+        seed = payload.get("seed")
+        if seed is not None:
+            try:
+                key = jax.random.PRNGKey(int(seed))
+            except (TypeError, ValueError) as exc:
+                return self._resolved(
+                    ServeResponse("bad_request", 400, f"bad seed: {exc}")
+                )
+        return self.submit(
+            key=key,
+            chunk_edges=payload.get("chunk_edges"),
+            num_edges=payload.get("num_edges"),
+            deadline_s=payload.get("deadline_s"),
+        )
+
+    # -- worker --------------------------------------------------------
+
+    def _drain(self) -> None:
+        while True:
+            req = self._q.get()
+            if req is None:
+                return
+            try:
+                resp = self._serve_one(req)
+            except BaseException as exc:  # noqa: B036 - loop must survive
+                self._bump("errors")
+                resp = ServeResponse("error", 500, repr(exc))
+            req.future.set_result(resp)
+
+    def _serve_one(self, req: _Request) -> ServeResponse:
+        t_start = time.monotonic()
+        wait = t_start - req.t_submit
+        if req.t_deadline is not None and t_start > req.t_deadline:
+            self._bump("deadline_expired")
+            return ServeResponse(
+                "deadline_exceeded", 408,
+                f"deadline passed {t_start - req.t_deadline:.3f}s before "
+                "service started",
+                wait_s=wait,
+            )
+
+        def attempt():
+            chaos.maybe_fail("serve.request")
+            kwargs = {"chunk_edges": req.chunk_edges}
+            if req.num_edges is not None:
+                kwargs["num_edges"] = req.num_edges
+            parts = []
+            for chunk in self.sampler.sample_stream(req.key, **kwargs):
+                _validate_chunk(chunk, self.sampler.n)
+                parts.append(chunk)
+            return parts
+
+        policy = self.retry_policy
+        if req.t_deadline is not None:
+            budget = req.t_deadline - t_start
+            policy = policy._replace(
+                deadline=budget
+                if policy.deadline is None
+                else min(policy.deadline, budget)
+            )
+        try:
+            parts = chaos.with_retries(
+                attempt,
+                policy,
+                on_retry=lambda *_: self._bump("retries"),
+            )
+        except chaos.DeadlineExceeded as exc:
+            self._bump("deadline_expired")
+            return ServeResponse(
+                "deadline_exceeded", 408, str(exc), wait_s=wait,
+                service_s=time.monotonic() - t_start,
+            )
+        except Exception as exc:
+            self._bump("errors")
+            return ServeResponse(
+                "error", 500, repr(exc), wait_s=wait,
+                service_s=time.monotonic() - t_start,
+            )
+        service = time.monotonic() - t_start
+        if req.t_deadline is not None and time.monotonic() > req.t_deadline:
+            self._bump("deadline_expired")
+            return ServeResponse(
+                "deadline_exceeded", 408,
+                f"service finished {time.monotonic() - req.t_deadline:.3f}s "
+                "past the deadline",
+                wait_s=wait, service_s=service,
+            )
+        edges = (
+            np.concatenate(parts)
+            if parts
+            else np.zeros((0, 2), dtype=self.sampler.config.dtype)
+        )
+        self._bump("completed")
+        return ServeResponse(
+            "ok", 0, edges=edges, chunks=len(parts),
+            wait_s=wait, service_s=service,
+        )
+
+    # -- lifecycle -----------------------------------------------------
+
+    def close(self) -> None:
+        """Stop accepting, drain in-flight requests, join the worker."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(None)  # blocks until a slot frees; sentinel drains last
+        self._worker.join()
+
+    def __enter__(self) -> "GraphServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def serve_graphs(args) -> None:
@@ -64,30 +386,44 @@ def serve_graphs(args) -> None:
     )
 
     total = empty = 0
-    for r in range(args.requests):
-        t0 = time.perf_counter()
-        nchunks = nedges = 0
-        for chunk in sampler.sample_stream(chunk_edges=args.chunk_edges):
-            _validate_chunk(chunk, sampler.n)
-            nchunks += 1
-            nedges += chunk.shape[0]
-        dt = time.perf_counter() - t0
-        total += nedges
-        if nedges == 0:
-            # a 0-edge draw is a legal sample (the |E| target can be 0),
-            # not a silent "0 chunks" — say so explicitly
-            empty += 1
-            print(f"[serve] request {r}: EMPTY sample (0 edges), {dt:.3f}s")
-        else:
-            print(
-                f"[serve] request {r}: {nedges} edges in {nchunks} chunks, "
-                f"{dt:.3f}s ({nedges / max(dt, 1e-9):.0f} edges/s)"
-            )
+    with GraphServer(
+        sampler,
+        max_queue=args.max_queue,
+        deadline_s=args.deadline_s,
+        chunk_edges=args.chunk_edges,
+    ) as server:
+        futures = [server.submit() for _ in range(args.requests)]
+        for r, fut in enumerate(futures):
+            resp = fut.result()
+            if not resp.ok:
+                print(
+                    f"[serve] request {r}: {resp.status} ({resp.code}) "
+                    f"{resp.message}"
+                )
+                continue
+            nedges = int(resp.edges.shape[0])
+            total += nedges
+            if nedges == 0:
+                # a 0-edge draw is a legal sample (the |E| target can be
+                # 0), not a silent "0 chunks" — say so explicitly
+                empty += 1
+                print(
+                    f"[serve] request {r}: EMPTY sample (0 edges), "
+                    f"{resp.service_s:.3f}s"
+                )
+            else:
+                print(
+                    f"[serve] request {r}: {nedges} edges in "
+                    f"{resp.chunks} chunks, {resp.service_s:.3f}s "
+                    f"({nedges / max(resp.service_s, 1e-9):.0f} edges/s, "
+                    f"waited {resp.wait_s:.3f}s)"
+                )
+        stats = dict(server.stats)
     if total == 0:
         print(f"[serve] WARNING: all {args.requests} requests were empty")
     print(
         f"[serve] OK ({total} edges over {args.requests} requests, "
-        f"{empty} empty)"
+        f"{empty} empty; stats={stats})"
     )
 
 
@@ -149,6 +485,19 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--chunk-edges", type=int, default=1 << 14)
     ap.add_argument("--mesh", action="store_true", help="shard over devices")
+    ap.add_argument(
+        "--max-queue",
+        type=int,
+        default=8,
+        help="in-flight request bound; submits beyond it are shed with a "
+        "typed 'overloaded' response",
+    )
+    ap.add_argument(
+        "--deadline-s",
+        type=float,
+        default=None,
+        help="per-request deadline in seconds (default: none)",
+    )
     args = ap.parse_args()
 
     if args.magm:
