@@ -1,0 +1,74 @@
+"""MAGFIT estimation benchmarks: E-step cost per edge and EM
+iterations-to-converge on a known-parameter graph.
+
+Rows:
+
+- ``fit_estep``  — one jit-compiled E-step call (Adam over the phi
+  logits); derived carries edges, steps, and the headline ms/edge.
+- ``fit_em``     — a full known-F variational-EM fit (M-step dominated);
+  derived carries iterations-to-converge, the convergence flag, and the
+  ELBO gain, so trajectory regressions in EITHER speed or fit quality
+  surface in the same table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import magm
+from repro.fit import magfit as mf
+from repro.fit import recover as rc
+
+THETA_FIT = np.array([[0.25, 0.55], [0.55, 0.82]], dtype=np.float32)
+
+
+def run(log_n: int = 12, d: int = 4) -> None:
+    n = 1 << log_n
+    params = magm.make_params(THETA_FIT, 0.5, d)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(0), n, params.mu)
+    )
+    edges = rc.exact_edges(params, F, seed=1)
+    e = edges.shape[0]
+    data = mf.shard_edges(edges, n)
+
+    steps = 10
+    order = 3
+    pl = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    thetas = jnp.asarray(np.full((d, 2, 2), 0.4, np.float32))
+    mu = jnp.full((d,), 0.5, jnp.float32)
+    t = time_call(
+        lambda: jax.block_until_ready(
+            mf.estep(pl, thetas, mu, data, steps=steps, order=order)[0]
+        )
+    )
+    emit(
+        "fit_estep",
+        t,
+        f"n={n};edges={e};steps={steps};order={order};"
+        f"ms_per_edge={t / e * 1e3:.6f}",
+    )
+
+    t0 = time.perf_counter()
+    fit = mf.magfit(
+        edges,
+        n,
+        d,
+        key=jax.random.PRNGKey(2),
+        options=mf.FitOptions(order=order, em_iters=8),
+        phi_init=F.astype(np.float32),
+        fit_phi=False,
+    )
+    t_em = time.perf_counter() - t0
+    tr = fit.elbo_trace
+    emit(
+        "fit_em",
+        t_em,
+        f"n={n};edges={e};iters={fit.iterations};converged={fit.converged};"
+        f"elbo_gain={float(tr[-1] - tr[0]):.1f}",
+    )

@@ -51,6 +51,7 @@ MODULE_PREFIXES = (
     ("kernel", "kernels"),
     ("balldrop", "partition"),
     ("serve", "serve"),
+    ("fit_", "fit"),
 )
 
 

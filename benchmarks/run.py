@@ -8,7 +8,8 @@ perf history accumulates across PRs (CI runs ``--fast --json``).
 Figure map: bench_partition (Figs 5-7), bench_properties (Figs 8-9),
 bench_scalability (Figs 10-11), bench_mu (Figs 12-13), bench_d (Fig 14),
 bench_kernels (Pallas kernel rooflines), bench_serve (GraphServer
-throughput / tail latency / overload shedding).
+throughput / tail latency / overload shedding), bench_fit (MAGFIT E-step
+cost per edge + EM iterations-to-converge).
 """
 
 import argparse
@@ -32,6 +33,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_d,
+        bench_fit,
         bench_kernels,
         bench_mu,
         bench_partition,
@@ -52,6 +54,7 @@ def main() -> None:
         "serve": lambda: bench_serve.run(
             d=8 if args.fast else 10, requests=8 if args.fast else 16
         ),
+        "fit": lambda: bench_fit.run(log_n=10 if args.fast else 12),
     }
     t0 = time.time()
     for name, fn in suites.items():

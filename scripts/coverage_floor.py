@@ -1,0 +1,84 @@
+"""Coverage soft floor: warn (never fail) when line coverage of the watched
+packages drops below the floor.
+
+    python scripts/coverage_floor.py coverage.json --floor 85 \
+        --watch src/repro/core --watch src/repro/fit
+
+Reads a ``coverage.py`` JSON report (pytest-cov ``--cov-report=json``),
+aggregates executed/statement counts over files under each watched prefix,
+and prints a per-package summary.  Packages below the floor emit a GitHub
+Actions ``::warning::`` annotation; the exit code is always 0 — this is a
+trajectory signal, not a gate, so honest refactors that temporarily shed
+covered lines don't block the PR.  A missing or unreadable report also
+warns and exits 0 (pytest-cov is a dev extra, absent in minimal
+containers).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_WATCH = ("src/repro/core", "src/repro/fit")
+
+
+def package_coverage(report: dict, prefix: str) -> tuple[int, int]:
+    """(covered, statements) summed over files under ``prefix``."""
+    norm = prefix.rstrip("/") + "/"
+    covered = statements = 0
+    for path, entry in report.get("files", {}).items():
+        rel = path.replace(os.sep, "/")
+        if rel.startswith(norm) or ("/" + norm) in ("/" + rel):
+            s = entry.get("summary", {})
+            covered += int(s.get("covered_lines", 0))
+            statements += int(s.get("num_statements", 0))
+    return covered, statements
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="coverage.py JSON report (coverage.json)")
+    ap.add_argument("--floor", type=float, default=85.0)
+    ap.add_argument(
+        "--watch",
+        action="append",
+        default=None,
+        help=f"package prefix to watch (repeatable; default {DEFAULT_WATCH})",
+    )
+    args = ap.parse_args()
+    watch = tuple(args.watch) if args.watch else DEFAULT_WATCH
+
+    try:
+        with open(args.report) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"::warning::coverage_floor: cannot read {args.report}: {exc}")
+        return 0
+
+    below = []
+    for prefix in watch:
+        covered, statements = package_coverage(report, prefix)
+        if statements == 0:
+            print(f"::warning::coverage_floor: no files matched {prefix}")
+            continue
+        pct = 100.0 * covered / statements
+        status = "ok" if pct >= args.floor else "BELOW FLOOR"
+        print(
+            f"coverage_floor: {prefix}: {covered}/{statements} lines "
+            f"({pct:.1f}%) — {status}"
+        )
+        if pct < args.floor:
+            below.append((prefix, pct))
+
+    for prefix, pct in below:
+        print(
+            f"::warning::coverage_floor: {prefix} line coverage {pct:.1f}% "
+            f"is below the {args.floor:.0f}% soft floor"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

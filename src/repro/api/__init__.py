@@ -14,6 +14,10 @@ One config, two sessions, one result type:
 The legacy free functions (``quilt_sample``, ``quilt_sample_fast``,
 ``kpgm_sample``) survive as deprecation shims that delegate here and are
 pinned bit-identical by test.  Migration table: docs/API.md.
+
+The fitting subsystem (``repro.fit``) closes the loop in the other
+direction: :func:`fit_config` estimates MAG parameters from an observed
+edge list and returns a ready-to-sample :class:`SamplerConfig`.
 """
 
 from repro.api.config import SamplerConfig
@@ -27,4 +31,21 @@ __all__ = [
     "QuiltStats",
     "MAGMSampler",
     "KPGMSampler",
+    "fit_config",
 ]
+
+
+def fit_config(edges, n, d, *, key=None, backend="auto", **fit_kwargs):
+    """Fit MAG parameters to an (E, 2) edge list; return a ready config.
+
+    Convenience wrapper over ``repro.fit`` (imported lazily — the fitting
+    subsystem itself builds on these sessions): runs variational EM via
+    ``repro.fit.magfit.magfit`` and packages the MAP attributes + fitted
+    ``(thetas, mu)`` as a :class:`SamplerConfig` for :class:`MAGMSampler`.
+    Returns ``(config, fit_result)``.
+    """
+    import repro.fit.magfit as _magfit
+    import repro.fit.recover as _recover
+
+    fit = _magfit.magfit(edges, n, d, key=key, **fit_kwargs)
+    return _recover.fitted_config(fit, backend=backend), fit

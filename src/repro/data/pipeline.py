@@ -24,6 +24,25 @@ from repro.configs import magm_paper
 from repro.core import magm
 
 
+def build_csr(edges: np.ndarray, n: int):
+    """(E, 2) directed edge list -> CSR ``(indptr, adj)`` over n nodes.
+
+    ``adj[indptr[i]:indptr[i+1]]`` are i's out-neighbours (stable source
+    order preserved).  Shared by the walk corpus below and by
+    ``repro.fit.ingest`` (MAGFIT consumes external graphs in this form).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size == 0:
+        return np.zeros(n + 1, dtype=np.int64), np.zeros((0,), dtype=np.int64)
+    if edges[:, 0].min() < 0 or edges[:, 0].max() >= n:
+        raise ValueError(f"edge sources must lie in [0, {n})")
+    order = np.argsort(edges[:, 0], kind="stable")
+    adj = edges[order, 1].copy()
+    counts = np.bincount(edges[:, 0], minlength=n)
+    indptr = np.concatenate([[0], np.cumsum(counts)])
+    return indptr, adj
+
+
 @dataclasses.dataclass
 class MAGMCorpus:
     num_nodes: int
@@ -49,16 +68,8 @@ class MAGMCorpus:
 
     # --- graph -> walk machinery ---------------------------------------
     def _build_csr(self, edges: np.ndarray) -> None:
-        n = self.num_nodes
         self.num_edges = edges.shape[0]
-        if edges.size == 0:
-            self.indptr = np.zeros(n + 1, dtype=np.int64)
-            self.adj = np.zeros((0,), dtype=np.int64)
-            return
-        order = np.argsort(edges[:, 0], kind="stable")
-        self.adj = edges[order, 1].copy()
-        counts = np.bincount(edges[:, 0], minlength=n)
-        self.indptr = np.concatenate([[0], np.cumsum(counts)])
+        self.indptr, self.adj = build_csr(edges, self.num_nodes)
 
     def _walk(self, rng: np.random.Generator) -> np.ndarray:
         n = self.num_nodes

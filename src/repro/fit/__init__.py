@@ -1,0 +1,62 @@
+"""MAGFIT: variational-EM estimation of MAG parameters from edge lists.
+
+The fitting half of the generate -> fit -> generate loop:
+
+- :mod:`repro.fit.magfit` — the jit-compiled variational E/M steps and
+  the monotone EM driver (``magfit.magfit``).
+- :mod:`repro.fit.ingest` — real/external edge lists into the shard/CSR
+  forms the fitter consumes.
+- :mod:`repro.fit.recover` — the round trip: fit an observed graph and
+  package the estimate as a ``SamplerConfig`` for ``MAGMSampler``
+  (``recover.recover``).
+
+The driver functions share their submodules' names, so the package
+deliberately does NOT re-export them bare (that would shadow the
+submodule attributes); use ``from repro.fit.magfit import magfit`` /
+``from repro.fit.recover import recover``, or the package-level aliases
+:func:`fit` and :func:`roundtrip`.
+"""
+
+from repro.fit import ingest, magfit, recover
+from repro.fit.ingest import EdgeList, fit_data, load_edge_list, to_csr
+from repro.fit.magfit import (
+    FitData,
+    FitOptions,
+    FitResult,
+    elbo,
+    elbo_dense,
+    shard_edges,
+)
+from repro.fit.recover import (
+    RecoveryReport,
+    bootstrap_theta_se,
+    canonicalize,
+    fitted_config,
+    hard_attributes,
+)
+
+fit = magfit.magfit
+roundtrip = recover.recover
+
+__all__ = [
+    "EdgeList",
+    "FitData",
+    "FitOptions",
+    "FitResult",
+    "RecoveryReport",
+    "bootstrap_theta_se",
+    "canonicalize",
+    "elbo",
+    "elbo_dense",
+    "fit",
+    "fit_data",
+    "fitted_config",
+    "hard_attributes",
+    "ingest",
+    "load_edge_list",
+    "magfit",
+    "recover",
+    "roundtrip",
+    "shard_edges",
+    "to_csr",
+]

@@ -1,0 +1,872 @@
+"""MAGFIT in JAX: variational-EM estimation of MAG parameters.
+
+Kim & Leskovec (arXiv:1009.3499, arXiv:1106.5053) fit the Multiplicative
+Attribute Graph model to an OBSERVED graph: given an edge list A on n nodes
+and an attribute count d, estimate the per-attribute affinity matrices
+``thetas`` (d, 2, 2), the Bernoulli means ``mu`` (d,), and a posterior over
+each node's latent attribute bits.  This module is the fitting half of the
+repo's generate -> fit -> generate loop (ROADMAP item 4): the result is a
+``magm.MAGMParams`` plus per-node posteriors that ``repro.fit.recover``
+turns into a ready-to-sample ``repro.api.SamplerConfig``.
+
+Variational family and objective
+--------------------------------
+Mean-field posterior q(F) = prod_{i,k} Bernoulli(phi_ik).  The evidence
+lower bound splits over observed edges E and the remaining pairs:
+
+    ELBO = sum_{(i,j) in E}  E_q[log Q_ij]            (edge term)
+         - sum_{(i,j) in E}  E_q[log(1 - Q_ij)]       (edge correction)
+         + sum_{ALL (i,j)}   E_q[log(1 - Q_ij)]       (all-pairs penalty)
+         + sum_{i,k} E_q[log P(f_ik | mu_k)] + H(q)   (prior + entropy)
+
+Two structural facts make every term cheap:
+
+- ``log Q`` is BILINEAR in the attribute bits (magm.bilinear_decompose),
+  so ``E_q[log Q_ij]`` is the same bilinear form evaluated on the soft
+  attributes phi — on TPU this is exactly the MXU tile the
+  ``kernels/magm_logprob.py`` Pallas kernel computes, with phi in place of
+  a hard F (:func:`dense_expected_logprob`).
+- ``log(1 - Q)`` expands as ``-sum_p Q^p / p`` (the Taylor treatment of
+  the MAGFIT paper, the same expansion ``analysis/validate.py`` uses for
+  isolated-node asymptotics), and under q the ALL-pairs sum of
+  ``E[Q_ij^p]`` collapses to the Kronecker quadratic form
+
+      sum_ij E[Q_ij^p] = cbar^T P_p cbar   (+ exact self-pair correction)
+
+  where ``P_p = kron(theta_1^p, ..., theta_d^p)`` and ``cbar`` is the SOFT
+  configuration multiplicity vector ``sum_i prod_k [1-phi_ik, phi_ik]`` —
+  the differentiable-jnp sibling of ``core/kron.py``'s hard-count forms,
+  O(order * d * 2^d) instead of O(n^2).
+
+Only the edge-indexed terms touch the edge list; they stream through
+fixed-shape shards (:func:`shard_edges`, sized via the
+``dist/sharding.py`` graphs-axis rules) inside ``lax.scan`` so the fitter
+never materializes O(E) intermediates per autodiff step.
+
+EM structure
+------------
+- E-step (:func:`estep`): jit-compiled Adam ascent on the phi logits with
+  best-iterate tracking.
+- M-step (:func:`mstep`): ``mu`` has the exact closed form ``mean(phi)``;
+  for ``thetas`` the order-<=2 truncation is conjugate — per entry the
+  objective is ``N log t - C1 t - C2 t^2 / 2`` with sufficient statistics
+  ``N`` (expected edge counts per attribute cell) and ``C_p`` (non-edge
+  moment coefficients, obtained as gradients of the soft quadratic forms)
+  — maximized in closed form by a quadratic root
+  (:func:`closed_form_thetas`).  The full-order objective is
+  non-conjugate; :func:`mstep` refines the closed-form proposal with
+  AdamW steps through ``train/optimizer.py``, again tracking the best
+  iterate.
+- Driver (:func:`magfit`): every E/M candidate is re-scored by ONE shared
+  jitted ELBO evaluation and accepted only if it does not decrease it, so
+  the reported ``elbo_trace`` is monotone non-decreasing by construction
+  (pinned per seed by tests/test_magfit.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import magm
+from repro.train import optimizer as _opt
+
+__all__ = [
+    "FitData",
+    "FitOptions",
+    "FitResult",
+    "shard_edges",
+    "elbo",
+    "elbo_dense",
+    "dense_expected_logprob",
+    "closed_form_thetas",
+    "newton_thetas",
+    "edge_cell_counts",
+    "penalty_coeffs",
+    "suff_stats",
+    "estep",
+    "mstep",
+    "magfit",
+]
+
+# past this much soft-configuration state (n * 2^d f32 entries) the
+# O(n 2^d) soft moments stop being E-step side work; mirrors the spirit of
+# kron.MOMENT_CAP for the hard-count forms
+FIT_STATE_CAP = 1 << 27
+
+_THETA_EPS = 1e-3  # thetas are clipped to [eps, 1 - eps]
+_LOG_EPS = 1e-12
+
+
+class FitData(NamedTuple):
+    """Observed edges, padded into fixed-shape shards for ``lax.scan``.
+
+    ``wt`` is 1.0 on real edges and 0.0 on padding rows (padding rows are
+    (0, 0) self-pairs, which every term multiplies by ``wt``).
+    """
+
+    src: jax.Array  # (S, K) int32
+    dst: jax.Array  # (S, K) int32
+    wt: jax.Array  # (S, K) float32
+
+
+class FitOptions(NamedTuple):
+    """Knobs of the EM loop (defaults tuned for n ~ 2^10..2^12)."""
+
+    order: int = 3  # truncation order of the log(1-Q) expansion
+    em_iters: int = 16  # max EM iterations
+    estep_steps: int = 40  # Adam steps per E-step
+    estep_lr: float = 0.4
+    mstep_steps: int = 10  # optimizer.py refinement steps per M-step
+    mstep_lr: float = 0.08
+    tol: float = 1e-6  # relative ELBO gain under which EM stops
+    # after latent EM, refit (thetas, mu) conditional on the HARDENED
+    # posteriors (phi thresholded at 1/2).  Downstream sampling conditions
+    # on hard attribute bits (fitted_config uses hard F), and thetas tuned
+    # against soft phi systematically overshoot expected edge counts once
+    # the soft mass is collapsed; one conditional M-step removes that
+    # soft->hard mismatch.  No-op when fit_phi=False (phi already hard).
+    harden: bool = True
+
+
+class FitResult(NamedTuple):
+    params: magm.MAGMParams  # fitted (thetas, mu)
+    phi: np.ndarray  # (n, d) posterior P(f_ik = 1)
+    elbo_trace: np.ndarray  # per-EM-iteration ELBO, non-decreasing
+    iterations: int
+    converged: bool
+
+    @property
+    def n(self) -> int:
+        return int(self.phi.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.phi.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# edge sharding
+# ---------------------------------------------------------------------------
+
+
+def shard_edges(
+    edges: np.ndarray,
+    n: int,
+    *,
+    shard_size: Optional[int] = None,
+    mesh=None,
+) -> FitData:
+    """Pack an (E, 2) edge list into fixed-shape ``(S, K)`` scan shards.
+
+    ``shard_size`` defaults to 2^15 rows; with a ``mesh`` the shard count
+    is rounded up to a multiple of the mesh's graphs-axis size
+    (``dist.sharding.graph_shard_axes``) so a sharded E-step can split
+    whole shards across devices without re-padding.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size and (edges.min() < 0 or edges.max() >= n):
+        raise ValueError(
+            f"edge endpoints must lie in [0, {n}); got "
+            f"[{edges.min()}, {edges.max()}]"
+        )
+    e = max(int(edges.shape[0]), 1)
+    k = int(shard_size) if shard_size else min(1 << 15, 1 << (e - 1).bit_length())
+    if k < 1:
+        raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+    s = -(-e // k)
+    if mesh is not None:
+        from repro.dist import sharding as _sharding
+
+        _, nshards = _sharding.graph_shard_axes(mesh)
+        s += (-s) % max(nshards, 1)
+    src = np.zeros(s * k, dtype=np.int32)
+    dst = np.zeros(s * k, dtype=np.int32)
+    wt = np.zeros(s * k, dtype=np.float32)
+    src[: edges.shape[0]] = edges[:, 0]
+    dst[: edges.shape[0]] = edges[:, 1]
+    wt[: edges.shape[0]] = 1.0
+    return FitData(
+        jnp.asarray(src.reshape(s, k)),
+        jnp.asarray(dst.reshape(s, k)),
+        jnp.asarray(wt.reshape(s, k)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# soft-attribute building blocks (all differentiable jnp)
+# ---------------------------------------------------------------------------
+
+
+def _soft_attr(phi: jax.Array) -> jax.Array:
+    """(n, d) -> (n, d, 2) per-bit marginals [q(f=0), q(f=1)]."""
+    return jnp.stack([1.0 - phi, phi], axis=-1)
+
+
+def _soft_configs(a: jax.Array) -> jax.Array:
+    """(n, d, 2) -> (n, 2^d) product distribution over configurations.
+
+    Level 0 is the most significant bit, matching
+    ``magm.configs_from_attributes``; row i is the outer product of node
+    i's d per-bit marginals, so ``sum_i`` of the result is the SOFT
+    configuration multiplicity vector (the q-expectation of
+    ``kron.config_multiplicities``).
+    """
+    n, d = a.shape[0], a.shape[1]
+    b = a[:, 0, :]
+    for k in range(1, d):
+        b = (b[:, :, None] * a[:, k, None, :]).reshape(n, -1)
+    return b
+
+
+def _kron_matvec_rows(T: jax.Array, b: jax.Array, d: int) -> jax.Array:
+    """Row-batched Kronecker matvec: (P b_i^T)_i for P = kron(T_0..T_{d-1}).
+
+    The jnp (differentiable, batched) sibling of ``kron.kron_matvec`` —
+    each level is one tensordot on the (n, 2, ..., 2) reshape, so the
+    whole batch is O(n d 2^d).
+    """
+    n = b.shape[0]
+    out = b.reshape((n,) + (2,) * d)
+    for t in range(d):
+        out = jnp.moveaxis(
+            jnp.tensordot(T[t], out, axes=([1], [t + 1])), 0, t + 1
+        )
+    return out.reshape(n, -1)
+
+
+def _soft_pair_moment(Tp: jax.Array, b: jax.Array, a: jax.Array) -> jax.Array:
+    """``sum over ALL ordered pairs (i, j) of E_q[Q_ij^p]`` given Tp = theta^p.
+
+    Mean-field independence gives ``cbar^T P_p cbar`` for i != j with
+    ``cbar = sum_i b_i``; the diagonal is corrected exactly (for i = j the
+    bits coincide, so ``E[Q_ii^p]`` contracts the per-level DIAGONAL of
+    Tp, not the full bilinear form).
+    """
+    d = Tp.shape[0]
+    cbar = jnp.sum(b, axis=0)
+    s_indep = cbar @ _kron_matvec_rows(Tp, cbar[None, :], d)[0]
+    pb = _kron_matvec_rows(Tp, b, d)
+    s_self_indep = jnp.sum(b * pb)
+    diag = a[:, :, 0] * Tp[None, :, 0, 0] + a[:, :, 1] * Tp[None, :, 1, 1]
+    s_self_exact = jnp.sum(jnp.prod(diag, axis=1))
+    return s_indep - s_self_indep + s_self_exact
+
+
+def _edge_moment_shard(
+    Tp: jax.Array,
+    a_s: jax.Array,
+    a_t: jax.Array,
+    is_self: jax.Array,
+    wt: jax.Array,
+) -> jax.Array:
+    """``sum over one edge shard of E_q[Q_e^p]`` (exact on self-edges)."""
+    m = jnp.einsum("kda,dab,kdb->kd", a_s, Tp, a_t)
+    md = a_s[:, :, 0] * Tp[None, :, 0, 0] + a_s[:, :, 1] * Tp[None, :, 1, 1]
+    mk = jnp.where(is_self[:, None], md, m)
+    return jnp.sum(wt * jnp.prod(mk, axis=1))
+
+
+def _edge_loglik_shard(
+    bl: magm.BilinearLogTheta,
+    phi_s: jax.Array,
+    phi_t: jax.Array,
+    is_self: jax.Array,
+    wt: jax.Array,
+) -> jax.Array:
+    """``sum over one edge shard of E_q[log Q_e]`` via the bilinear form.
+
+    For i = j the interaction term is linear (f^2 = f), so the bilinear
+    value gets the exact correction ``sum_k w_k (phi_ik - phi_ik^2)``.
+    """
+    base = (
+        bl.c0
+        + phi_s @ bl.u
+        + phi_t @ bl.v
+        + jnp.sum(phi_s * bl.w[None, :] * phi_t, axis=1)
+    )
+    corr = jnp.sum(bl.w[None, :] * (phi_s - phi_s * phi_t), axis=1)
+    return jnp.sum(wt * (base + jnp.where(is_self, corr, 0.0)))
+
+
+def _edge_terms(
+    phi: jax.Array, thetas: jax.Array, data: FitData, order: int
+) -> Tuple[jax.Array, jax.Array]:
+    """(edge log-lik sum, edge sum of sum_p E[Q^p]/p) over all shards."""
+    bl = magm.bilinear_decompose(thetas)
+    a = _soft_attr(phi)
+    tstack = jnp.stack([thetas**p for p in range(1, order + 1)])
+
+    def body(carry, shard):
+        src, dst, wt = shard
+        phi_s, phi_t = phi[src], phi[dst]
+        a_s, a_t = a[src], a[dst]
+        is_self = src == dst
+        ll = _edge_loglik_shard(bl, phi_s, phi_t, is_self, wt)
+        em = 0.0
+        for p in range(order):
+            em = em + _edge_moment_shard(
+                tstack[p], a_s, a_t, is_self, wt
+            ) / (p + 1)
+        return (carry[0] + ll, carry[1] + em), None
+
+    (ll, em), _ = jax.lax.scan(body, (0.0, 0.0), (data.src, data.dst, data.wt))
+    return ll, em
+
+
+def _xlogx(x: jax.Array) -> jax.Array:
+    return x * jnp.log(jnp.clip(x, _LOG_EPS, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# the objective
+# ---------------------------------------------------------------------------
+
+
+def elbo(
+    phi: jax.Array,
+    thetas: jax.Array,
+    mu: jax.Array,
+    data: FitData,
+    *,
+    order: int = 3,
+) -> jax.Array:
+    """The order-``order`` truncated ELBO (see module docstring).
+
+    Exactly equal (up to float association) to the O(n^2) per-pair
+    reference :func:`elbo_dense` — pinned by tests/test_magfit.py.
+    """
+    a = _soft_attr(phi)
+    b = _soft_configs(a)
+    ll, em = _edge_terms(phi, thetas, data, order)
+    s = 0.0
+    for p in range(1, order + 1):
+        s = s + _soft_pair_moment(thetas**p, b, a) / p
+    prior = jnp.sum(
+        phi * jnp.log(jnp.clip(mu, _LOG_EPS, 1.0))[None, :]
+        + (1.0 - phi) * jnp.log(jnp.clip(1.0 - mu, _LOG_EPS, 1.0))[None, :]
+    )
+    entropy = -jnp.sum(_xlogx(phi) + _xlogx(1.0 - phi))
+    return ll + em - s + prior + entropy
+
+
+def dense_expected_logprob(
+    phi: jax.Array, thetas: jax.Array, *, use_kernel: bool = False
+) -> jax.Array:
+    """(n, n) matrix of ``E_q[log Q_ij]`` for i != j (dense, O(n^2 d)).
+
+    ``log Q`` is bilinear in the bits, so its q-expectation is the SAME
+    bilinear form on the soft attributes: with ``use_kernel=True`` this
+    dispatches to the ``kernels/magm_logprob.py`` Pallas MXU tile (the
+    E-step's dense scoring path on TPU); otherwise the jnp contraction.
+    Diagonal entries follow the independent-bits convention — add the
+    ``sum_k w_k (phi - phi^2)`` correction for exact self-pair values.
+    """
+    if use_kernel:
+        from repro.kernels import ops as _ops
+
+        return _ops.magm_logprob_pallas(phi, phi, thetas)
+    return magm.log_edge_prob(phi, phi, thetas)
+
+
+def elbo_dense(
+    phi: jax.Array,
+    thetas: jax.Array,
+    mu: jax.Array,
+    edges: np.ndarray,
+    n: int,
+    *,
+    order: int = 3,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """O(n^2) per-pair reference ELBO (tests / small-n scoring only).
+
+    Materializes every pair's ``E[log Q]`` (optionally through the Pallas
+    log-probability kernel) and ``E[Q^p]``; :func:`elbo` is the
+    algebraically identical O(E + n 2^d) form.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    phi = jnp.asarray(phi, dtype=jnp.float32)
+    a = _soft_attr(phi)
+    adj = jnp.zeros((n, n), dtype=jnp.float32)
+    if edges.size:
+        adj = adj.at[edges[:, 0], edges[:, 1]].set(1.0)
+
+    bl = magm.bilinear_decompose(thetas)
+    logq = dense_expected_logprob(phi, thetas, use_kernel=use_kernel)
+    self_corr = jnp.sum(bl.w[None, :] * (phi - phi * phi), axis=1)
+    logq = logq + jnp.diag(self_corr)
+    ll = jnp.sum(adj * logq)
+
+    eye = jnp.eye(n, dtype=bool)
+    neg1m = jnp.zeros((n, n), dtype=jnp.float32)
+    for p in range(1, order + 1):
+        tp = thetas**p
+        pair = jnp.prod(jnp.einsum("ida,dab,jdb->ijd", a, tp, a), axis=2)
+        md = a[:, :, 0] * tp[None, :, 0, 0] + a[:, :, 1] * tp[None, :, 1, 1]
+        pair = jnp.where(eye, jnp.prod(md, axis=1)[:, None], pair)
+        neg1m = neg1m + pair / p
+    penalty = jnp.sum((1.0 - adj) * neg1m)
+
+    prior = jnp.sum(
+        phi * jnp.log(jnp.clip(mu, _LOG_EPS, 1.0))[None, :]
+        + (1.0 - phi) * jnp.log(jnp.clip(1.0 - mu, _LOG_EPS, 1.0))[None, :]
+    )
+    entropy = -jnp.sum(_xlogx(phi) + _xlogx(1.0 - phi))
+    return ll - penalty + prior + entropy
+
+
+# ---------------------------------------------------------------------------
+# M-step sufficient statistics and closed form
+# ---------------------------------------------------------------------------
+
+
+def edge_cell_counts(phi: jax.Array, data: FitData) -> jax.Array:
+    """Expected edge counts per attribute cell, ``N[k, a, b]``.
+
+    ``N[k, a, b]`` is the expected number of observed edges whose endpoint
+    bits at attribute k are (a, b) (self-edges contribute exactly, on the
+    diagonal).  Theta-independent, so the M-step computes it ONCE and
+    reuses it across the Gauss-Seidel sweep.
+    """
+    a = _soft_attr(phi)
+    d = phi.shape[1]
+
+    def counts_body(carry, shard):
+        src, dst, wt = shard
+        a_s, a_t = a[src], a[dst]
+        is_self = (src == dst).astype(jnp.float32)
+        w_pair = wt * (1.0 - is_self)
+        outer = jnp.einsum("k,kda,kdb->dab", w_pair, a_s, a_t)
+        w_self = wt * is_self
+        diag = jnp.einsum("k,kda->da", w_self, a_s)
+        outer = outer.at[:, 0, 0].add(diag[:, 0])
+        outer = outer.at[:, 1, 1].add(diag[:, 1])
+        return carry + outer, None
+
+    N, _ = jax.lax.scan(
+        counts_body,
+        jnp.zeros((d, 2, 2), dtype=jnp.float32),
+        (data.src, data.dst, data.wt),
+    )
+    return N
+
+
+def penalty_coeffs(
+    phi: jax.Array, thetas: jax.Array, data: FitData, *, order: int = 2
+) -> Tuple[jax.Array, ...]:
+    """Non-edge penalty coefficients ``(C_1, ..., C_order)``.
+
+    ``C_p[k, a, b]`` is the coefficient of ``theta_k[a,b]^p`` in the
+    non-edge penalty — obtained as the gradient of the soft quadratic
+    forms with respect to the ENTRYWISE p-th power ``theta^p`` (the
+    penalty is multilinear in those slices, so the gradient IS the
+    coefficient).  With ``N = edge_cell_counts(phi, data)``, the
+    truncated ELBO reads per attribute entry
+
+        N log t - sum_p C_p t^p / p  + const.
+    """
+    a = _soft_attr(phi)
+    b = _soft_configs(a)
+
+    def nonedge_mass(tp):
+        def body(carry, shard):
+            src, dst, wt = shard
+            is_self = src == dst
+            return (
+                carry
+                + _edge_moment_shard(tp, a[src], a[dst], is_self, wt),
+                None,
+            )
+
+        e_sum, _ = jax.lax.scan(body, 0.0, (data.src, data.dst, data.wt))
+        return _soft_pair_moment(tp, b, a) - e_sum
+
+    return tuple(
+        jax.grad(nonedge_mass)(thetas**p) for p in range(1, order + 1)
+    )
+
+
+def suff_stats(
+    phi: jax.Array, thetas: jax.Array, data: FitData, *, order: int = 2
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """M-step sufficient statistics ``(N, (C_1, ..., C_order))``.
+
+    Convenience composition of :func:`edge_cell_counts` (theta-free) and
+    :func:`penalty_coeffs`; callers that re-solve at many thetas (the
+    Gauss-Seidel sweep, the bootstrap) should split the two and hoist N.
+    """
+    return (
+        edge_cell_counts(phi, data),
+        penalty_coeffs(phi, thetas, data, order=order),
+    )
+
+
+def closed_form_thetas(
+    N: jax.Array,
+    C1: jax.Array,
+    C2: Optional[jax.Array] = None,
+    *,
+    eps: float = _THETA_EPS,
+) -> jax.Array:
+    """Entrywise argmax of ``N log t - C1 t - C2 t^2 / 2`` on [eps, 1-eps].
+
+    The order-1 truncation gives the Poisson-style MLE ``t = N / C1``; at
+    order 2 the stationarity condition ``C2 t^2 + C1 t - N = 0`` has the
+    closed-form positive root.  Higher orders are non-conjugate — the
+    gradient path in :func:`mstep` handles them.
+    """
+    t1 = N / jnp.maximum(C1, _LOG_EPS)
+    if C2 is None:
+        return jnp.clip(t1, eps, 1.0 - eps)
+    disc = jnp.sqrt(C1 * C1 + 4.0 * C2 * N)
+    t2 = (disc - C1) / jnp.maximum(2.0 * C2, _LOG_EPS)
+    t = jnp.where(C2 > 1e-8, t2, t1)
+    return jnp.clip(t, eps, 1.0 - eps)
+
+
+def newton_thetas(
+    N: jax.Array,
+    coeffs: Tuple[jax.Array, ...],
+    t0: jax.Array,
+    *,
+    steps: int = 12,
+    eps: float = _THETA_EPS,
+) -> jax.Array:
+    """Entrywise argmax of ``N log t - sum_p C_p t^p / p`` at ANY order.
+
+    The per-cell objective is strictly concave on t > 0 (every C_p >= 0),
+    so a few clipped Newton iterations from ``t0`` converge to the unique
+    stationary point — the arbitrary-order sibling of
+    :func:`closed_form_thetas`, used by the M-step so the closed-form
+    proposal maximizes the SAME truncation order as the ELBO (an order-2
+    proposal against an order-P objective leaves a truncation-bias gap the
+    gradient refinement then has to walk off).
+    """
+    t = jnp.clip(t0, eps, 1.0 - eps)
+    for _ in range(steps):
+        g = N / t
+        h = -N / (t * t)
+        for p, C in enumerate(coeffs, start=1):
+            g = g - C * t ** (p - 1)
+            if p >= 2:
+                h = h - (p - 1) * C * t ** (p - 2)
+        t = jnp.clip(t - g / jnp.minimum(h, -_LOG_EPS), eps, 1.0 - eps)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# E-step / M-step (jit-compiled)
+# ---------------------------------------------------------------------------
+
+
+def _logit(p: jax.Array) -> jax.Array:
+    p = jnp.clip(p, _THETA_EPS, 1.0 - _THETA_EPS)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "order"))
+def estep(
+    phi_logits: jax.Array,
+    thetas: jax.Array,
+    mu: jax.Array,
+    data: FitData,
+    *,
+    steps: int = 40,
+    lr: float = 0.4,
+    order: int = 3,
+) -> Tuple[jax.Array, jax.Array]:
+    """Variational E-step: maximize the ELBO over the phi logits.
+
+    ``steps`` Adam iterations with best-iterate tracking (the returned
+    logits are the best VISITED point, never worse than the input).
+    Returns ``(phi_logits, elbo_value)``.
+    """
+
+    def loss(pl):
+        return -elbo(jax.nn.sigmoid(pl), thetas, mu, data, order=order)
+
+    vg = jax.value_and_grad(loss)
+
+    def body(carry, i):
+        pl, m, v, best_val, best_pl = carry
+        val, g = vg(pl)
+        better = val < best_val
+        best_val = jnp.where(better, val, best_val)
+        best_pl = jnp.where(better, pl, best_pl)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mhat = m / (1.0 - jnp.power(0.9, i + 1.0))
+        vhat = v / (1.0 - jnp.power(0.999, i + 1.0))
+        pl = pl - lr * mhat / (jnp.sqrt(vhat) + 1e-8)
+        return (pl, m, v, best_val, best_pl), None
+
+    zeros = jnp.zeros_like(phi_logits)
+    init = (phi_logits, zeros, zeros, jnp.asarray(jnp.inf), phi_logits)
+    (pl, _, _, best_val, best_pl), _ = jax.lax.scan(
+        body, init, jnp.arange(steps, dtype=jnp.float32)
+    )
+    final_val = loss(pl)
+    better = final_val < best_val
+    best_val = jnp.where(better, final_val, best_val)
+    best_pl = jnp.where(better, pl, best_pl)
+    return best_pl, -best_val
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "order"))
+def mstep(
+    phi_logits: jax.Array,
+    thetas: jax.Array,
+    mu: jax.Array,
+    data: FitData,
+    *,
+    steps: int = 10,
+    lr: float = 0.08,
+    order: int = 3,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """M-step: closed-form ``mu``, closed-form + gradient-refined thetas.
+
+    ``mu = mean(phi)`` is the exact prior argmax.  Thetas take one
+    Gauss-Seidel sweep of per-attribute exact solves (Newton on the
+    concave per-cell objective, :func:`newton_thetas` on
+    :func:`suff_stats`) and are then refined on the joint objective with
+    ``steps`` AdamW iterations through ``train/optimizer.py`` (the
+    non-conjugate gradient path); the best iterate — including the
+    incoming thetas, so the step never regresses — wins.
+    Returns ``(thetas, mu, elbo_value)``.
+    """
+    phi = jax.nn.sigmoid(phi_logits)
+    mu_new = jnp.clip(jnp.mean(phi, axis=0), _THETA_EPS, 1.0 - _THETA_EPS)
+
+    # Gauss-Seidel over attributes: each slice's per-cell solve is EXACT
+    # given the other slices (1-D concave Newton at the FULL truncation
+    # order), so sequential updates — coefficients recomputed after every
+    # slice — are true coordinate ascent.  A simultaneous (Jacobi) update
+    # of all slices overshoots badly when they all move the same way.
+    # N is theta-free (hoisted); the sweep runs as a fori_loop so the
+    # per-slice body traces ONCE, not d times.
+    d = thetas.shape[0]
+    N = edge_cell_counts(phi, data)
+
+    def gs_body(k, th):
+        coeffs = penalty_coeffs(phi, th, data, order=order)
+        upd = newton_thetas(N, coeffs, th)
+        return th.at[k].set(upd[k])
+
+    th_cf = jax.lax.fori_loop(0, d, gs_body, thetas)
+
+    def loss(params):
+        th = jax.nn.sigmoid(params["theta_logits"])
+        return -elbo(phi, th, mu_new, data, order=order)
+
+    vg = jax.value_and_grad(loss)
+    params = {"theta_logits": _logit(th_cf)}
+    ocfg = _opt.OptConfig(
+        lr=lr,
+        warmup_steps=0,
+        total_steps=max(steps, 1),
+        weight_decay=0.0,
+        clip_norm=10.0,
+    )
+    state = _opt.init(params)
+
+    # guard seeds: the incoming thetas (never regress)
+    base_val = -elbo(phi, thetas, mu_new, data, order=order)
+
+    def body(carry, _):
+        params, state, best_val, best_th = carry
+        val, g = vg(params)
+        th_cur = jax.nn.sigmoid(params["theta_logits"])
+        better = val < best_val
+        best_val = jnp.where(better, val, best_val)
+        best_th = jnp.where(better, th_cur, best_th)
+        params, state, _ = _opt.update(ocfg, g, state, params)
+        return (params, state, best_val, best_th), None
+
+    init = ({"theta_logits": params["theta_logits"]}, state, base_val, thetas)
+    (params, _, best_val, best_th), _ = jax.lax.scan(
+        body, init, jnp.arange(max(steps, 1))
+    )
+    final_th = jax.nn.sigmoid(params["theta_logits"])
+    final_val = -elbo(phi, final_th, mu_new, data, order=order)
+    better = final_val < best_val
+    best_val = jnp.where(better, final_val, best_val)
+    best_th = jnp.where(better, final_th, best_th)
+    return best_th, mu_new, -best_val
+
+
+@functools.partial(jax.jit, static_argnames=("order",))
+def _elbo_logits(phi_logits, thetas, mu, data, order):
+    """The ONE shared acceptance evaluation of the EM driver (a single
+    compiled program, so guard comparisons are exactly reproducible)."""
+    return elbo(jax.nn.sigmoid(phi_logits), thetas, mu, data, order=order)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def init_state(
+    key: jax.Array,
+    n: int,
+    d: int,
+    num_edges: int,
+    *,
+    init_params: Optional[magm.MAGMParams] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Initial ``(phi_logits, thetas, mu)``.
+
+    phi logits are small-noise (symmetry breaking around the
+    uninformative posterior); thetas start at the density-matched flat
+    value ``(E / n^2)^(1/d)`` with multiplicative jitter — symmetric
+    starts are saddle points of the flip/permutation symmetry group.
+    """
+    k1, k2 = jax.random.split(key)
+    phi_logits = 0.1 * jax.random.normal(k1, (n, d), dtype=jnp.float32)
+    if init_params is not None:
+        thetas = jnp.clip(
+            jnp.asarray(init_params.thetas, dtype=jnp.float32),
+            _THETA_EPS,
+            1.0 - _THETA_EPS,
+        )
+        mu = jnp.clip(
+            jnp.asarray(init_params.mu, dtype=jnp.float32),
+            _THETA_EPS,
+            1.0 - _THETA_EPS,
+        )
+        return phi_logits, thetas, mu
+    rho = max(num_edges, 1) / float(n) ** 2
+    base = np.clip(rho ** (1.0 / d), 0.05, 0.9)
+    jitter = jnp.exp(0.25 * jax.random.normal(k2, (d, 2, 2), jnp.float32))
+    thetas = jnp.clip(base * jitter, _THETA_EPS, 1.0 - _THETA_EPS)
+    mu = jnp.full((d,), 0.5, dtype=jnp.float32)
+    return phi_logits, thetas, mu
+
+
+def magfit(
+    edges: np.ndarray,
+    n: int,
+    d: int,
+    *,
+    key: Optional[jax.Array] = None,
+    options: FitOptions = FitOptions(),
+    init_params: Optional[magm.MAGMParams] = None,
+    phi_init: Optional[np.ndarray] = None,
+    fit_phi: bool = True,
+    shard_size: Optional[int] = None,
+    mesh=None,
+) -> FitResult:
+    """Fit MAG parameters to an observed edge list by variational EM.
+
+    Every E/M candidate is re-scored by one shared jitted ELBO and
+    accepted only when it does not decrease it, so ``elbo_trace`` is
+    non-decreasing by construction; EM stops when the per-iteration gain
+    falls below ``options.tol`` (relative) or after ``em_iters``.
+
+    ``phi_init`` seeds the posterior means (e.g. the true attribute
+    matrix in recovery tests, or a warm start from a previous fit);
+    ``fit_phi=False`` additionally FREEZES them, reducing EM to the
+    M-step — the conditional-on-attributes theta estimation whose
+    bootstrap confidence intervals are well-posed (no latent-attribute
+    symmetry left; see ``repro.fit.recover``).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.shape[0] == 0:
+        raise ValueError("cannot fit MAG parameters to an empty edge list")
+    if n * (1 << d) > FIT_STATE_CAP:
+        raise ValueError(
+            f"n * 2^d = {n * (1 << d)} exceeds FIT_STATE_CAP "
+            f"({FIT_STATE_CAP}); reduce d or fit on a subsample"
+        )
+    key = jax.random.PRNGKey(0) if key is None else key
+    data = shard_edges(edges, n, shard_size=shard_size, mesh=mesh)
+    phi_logits, thetas, mu = init_state(
+        key, n, d, edges.shape[0], init_params=init_params
+    )
+    if phi_init is not None:
+        phi_init = np.asarray(phi_init, dtype=np.float32)
+        if phi_init.shape != (n, d):
+            raise ValueError(
+                f"phi_init must have shape {(n, d)}, got {phi_init.shape}"
+            )
+        phi_logits = _logit(jnp.asarray(phi_init))
+    order = int(options.order)
+    val = float(_elbo_logits(phi_logits, thetas, mu, data, order))
+    trace = []
+    converged = False
+    iterations = 0
+    for it in range(int(options.em_iters)):
+        iterations = it + 1
+        moved = False
+
+        if fit_phi:
+            pl_cand, _ = estep(
+                phi_logits,
+                thetas,
+                mu,
+                data,
+                steps=int(options.estep_steps),
+                lr=float(options.estep_lr),
+                order=order,
+            )
+            v = float(_elbo_logits(pl_cand, thetas, mu, data, order))
+            if v >= val:
+                phi_logits, val, moved = pl_cand, v, True
+
+        th_cand, mu_cand, _ = mstep(
+            phi_logits,
+            thetas,
+            mu,
+            data,
+            steps=int(options.mstep_steps),
+            lr=float(options.mstep_lr),
+            order=order,
+        )
+        v = float(_elbo_logits(phi_logits, th_cand, mu_cand, data, order))
+        if v >= val:
+            thetas, mu, val, moved = th_cand, mu_cand, v, True
+
+        prev = trace[-1] if trace else -np.inf
+        trace.append(val)
+        gain = val - prev
+        if not moved or (
+            np.isfinite(prev) and gain <= float(options.tol) * (1.0 + abs(prev))
+        ):
+            converged = True
+            break
+
+    phi = np.asarray(jax.nn.sigmoid(phi_logits), dtype=np.float32)
+
+    if fit_phi and options.harden:
+        # conditional refit on the hardened posteriors (FitOptions.harden):
+        # thetas/mu consistent with the hard F that fitted_config samples.
+        # A few sweeps — one Gauss-Seidel pass per mstep call leaves a
+        # cross-attribute coupling residual that the second/third remove.
+        pl_hard = _logit(jnp.asarray((phi > 0.5).astype(np.float32)))
+        for _ in range(3):
+            thetas, mu, _ = mstep(
+                pl_hard,
+                thetas,
+                mu,
+                data,
+                steps=int(options.mstep_steps),
+                lr=float(options.mstep_lr),
+                order=order,
+            )
+
+    params = magm.MAGMParams(
+        jnp.asarray(thetas, dtype=jnp.float32),
+        jnp.asarray(mu, dtype=jnp.float32),
+    )
+    return FitResult(
+        params=params,
+        phi=phi,
+        elbo_trace=np.asarray(trace, dtype=np.float64),
+        iterations=iterations,
+        converged=converged,
+    )

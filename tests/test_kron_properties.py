@@ -1,0 +1,112 @@
+"""Property-based checks of core/kron.py (via the hypothesis shim): the
+Kronecker matvec/rmatvec/diag forms against dense constructions for d <= 6,
+edge-count-moment invariants, and the MOMENT_CAP gate in the quilt-plan
+builder that decides whether ball-dropping moments exist at all.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import kron, magm, quilt
+
+
+def _rand_thetas(rng, d):
+    return rng.uniform(0.05, 0.95, size=(d, 2, 2))
+
+
+def _dense(thetas):
+    P = np.ones((1, 1))
+    for th in thetas:
+        P = np.kron(P, np.asarray(th, dtype=np.float64))
+    return P
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=10_000))
+def test_kron_matvec_matches_dense(d, seed):
+    rng = np.random.default_rng(seed)
+    th = _rand_thetas(rng, d)
+    v = rng.normal(size=1 << d)
+    np.testing.assert_allclose(
+        kron.kron_matvec(th, v), _dense(th) @ v, rtol=1e-10, atol=1e-12
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=10_000))
+def test_kron_rmatvec_matches_dense_transpose(d, seed):
+    rng = np.random.default_rng(seed)
+    th = _rand_thetas(rng, d)
+    v = rng.normal(size=1 << d)
+    np.testing.assert_allclose(
+        kron.kron_rmatvec(th, v), _dense(th).T @ v, rtol=1e-10, atol=1e-12
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=10_000))
+def test_kron_diag_matches_dense(d, seed):
+    rng = np.random.default_rng(seed)
+    th = _rand_thetas(rng, d)
+    np.testing.assert_allclose(
+        kron.kron_diag(th), np.diag(_dense(th)), rtol=1e-12
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=10_000))
+def test_edge_count_moments_invariants(d, seed):
+    """mean = c^T P c >= 0, std >= 0, and mean matches the dense quadratic
+    form; the Bernoulli-sum identity also bounds std^2 <= mean."""
+    rng = np.random.default_rng(seed)
+    th = _rand_thetas(rng, d)
+    c = rng.integers(0, 20, size=1 << d).astype(np.float64)
+    mean, std = kron.edge_count_moments(c, th)
+    assert mean >= 0.0 and std >= 0.0
+    assert std * std <= mean * (1 + 1e-9) + 1e-9
+    np.testing.assert_allclose(mean, c @ _dense(th) @ c, rtol=1e-10)
+
+
+def test_edge_count_moments_zero_multiplicities():
+    th = _rand_thetas(np.random.default_rng(0), 3)
+    mean, std = kron.edge_count_moments(np.zeros(8), th)
+    assert mean == 0.0 and std == 0.0
+
+
+# -- MOMENT_CAP boundary -----------------------------------------------------
+
+
+THETA = np.array([[0.3, 0.6], [0.6, 0.9]], dtype=np.float32)
+
+
+def _plan(d=3, n=32):
+    params = magm.make_params(THETA, 0.5, d)
+    F = np.asarray(
+        magm.sample_attributes(__import__("jax").random.PRNGKey(0), n, params.mu)
+    )
+    return quilt.build_quilt_plan(F, params.thetas)
+
+
+def test_plan_has_balldrop_moments_below_cap():
+    plan = _plan(d=3)
+    assert plan.bd_mean is not None and plan.bd_mean >= 0.0
+    assert plan.bd_std is not None and plan.bd_std >= 0.0
+    assert plan.bd_cost is not None and plan.bd_cost >= 1.0
+
+
+def test_plan_skips_balldrop_moments_past_cap(monkeypatch):
+    """With 2^d just past the gate, build_quilt_plan must skip the O(2^d)
+    moment machinery (bd_* = None) but still build a usable plan."""
+    monkeypatch.setattr(kron, "MOMENT_CAP", (1 << 3) - 1)
+    plan = _plan(d=3)
+    assert plan.bd_mean is None and plan.bd_std is None
+    assert plan.bd_cost is None
+    assert plan.mean_edges > 0  # the kpgm unconditional moments survive
+
+
+def test_plan_keeps_balldrop_moments_at_exact_cap(monkeypatch):
+    """The gate is inclusive: 2^d == MOMENT_CAP still computes moments."""
+    monkeypatch.setattr(kron, "MOMENT_CAP", 1 << 3)
+    plan = _plan(d=3)
+    assert plan.bd_mean is not None

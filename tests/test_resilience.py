@@ -332,3 +332,98 @@ def test_quilt_round_site_fires_per_round():
         with pytest.raises(chaos.InjectedFault):
             quilt.quilt_run(jax.random.PRNGKey(2), plan)
     assert sched.counters["quilt.round"] == 1
+
+
+# -- balldrop backend: the same resilience contract --------------------------
+
+
+def test_balldrop_kill_mid_stream_resume_bit_identical(tmp_path):
+    """The ball-dropping engine rides the identical checkpoint/resume
+    machinery: a stream killed mid-flight splices back bit-identically."""
+    cfg = _magm_config(backend="balldrop")
+    key = jax.random.PRNGKey(9)
+    full = np.concatenate(
+        list(MAGMSampler(cfg).sample_stream(key, chunk_edges=64))
+    )
+    assert full.shape[0] > 2 * 64  # the kill point is mid-stream
+
+    d = str(tmp_path)
+    got = _stream_killed_at(MAGMSampler(cfg), key, 64, d, visit=2)
+    rest = list(MAGMSampler(cfg).resume_stream(d))
+    assert rest
+    np.testing.assert_array_equal(np.concatenate(got + rest), full)
+
+
+def test_balldrop_checkpoint_refuses_foreign_backend(tmp_path):
+    """backend= is part of the stream config digest: a balldrop checkpoint
+    must not resume under the quilt engine (different edge stream), and
+    vice versa — in both directions the refusal is a config-digest error,
+    not a silent wrong-graph splice."""
+    d1 = str(tmp_path / "bd")
+    _stream_killed_at(
+        MAGMSampler(_magm_config(backend="balldrop")),
+        jax.random.PRNGKey(4),
+        64,
+        d1,
+        visit=1,
+    )
+    with pytest.raises(ValueError, match="different sampler config"):
+        list(MAGMSampler(_magm_config(backend="auto")).resume_stream(d1))
+
+    d2 = str(tmp_path / "auto")
+    _stream_killed_at(
+        MAGMSampler(_magm_config(backend="auto")),
+        jax.random.PRNGKey(4),
+        64,
+        d2,
+        visit=1,
+    )
+    with pytest.raises(ValueError, match="different sampler config"):
+        list(
+            MAGMSampler(_magm_config(backend="balldrop")).resume_stream(d2)
+        )
+
+
+# -- sample_batch ------------------------------------------------------------
+
+
+def test_sample_batch_deterministic_and_valid():
+    cfg = _magm_config()
+    key = jax.random.PRNGKey(11)
+    a = MAGMSampler(cfg).sample_batch(3, key)
+    b = MAGMSampler(cfg).sample_batch(3, key)
+    assert len(a) == len(b) == 3
+    for ga, gb in zip(a, b):
+        assert ga.n == 128 and ga.num_edges > 0
+        np.testing.assert_array_equal(ga.edges, gb.edges)
+    assert MAGMSampler(cfg).sample_batch(0) == []
+
+
+def test_sample_batch_fallback_loop_matches_fold_in():
+    """Configs the fused device batch cannot serve (host backend) fall
+    back to the documented per-sample ``fold_in(key, s)`` loop, so each
+    member is independently reproducible from its own key."""
+    cfg = _magm_config(backend="host")
+    key = jax.random.PRNGKey(12)
+    sampler = MAGMSampler(cfg)
+    batch = sampler.sample_batch(2, key)
+    assert len(batch) == 2
+    for s, gs in enumerate(batch):
+        solo = MAGMSampler(cfg).sample(jax.random.fold_in(key, s))
+        np.testing.assert_array_equal(gs.edges, solo.edges)
+
+
+def test_sample_batch_then_resume_stream_coexist(tmp_path):
+    """A session that just served a batch still resumes a checkpointed
+    stream correctly (batch draws must not disturb the stream cursor)."""
+    cfg = _magm_config()
+    key = jax.random.PRNGKey(13)
+    full = np.concatenate(
+        list(MAGMSampler(cfg).sample_stream(key, chunk_edges=64))
+    )
+    d = str(tmp_path)
+    got = _stream_killed_at(MAGMSampler(cfg), key, 64, d, visit=2)
+    sampler = MAGMSampler(cfg)
+    assert len(sampler.sample_batch(2, jax.random.PRNGKey(14))) == 2
+    rest = list(sampler.resume_stream(d))
+    np.testing.assert_array_equal(np.concatenate(got + rest), full)

@@ -26,6 +26,9 @@ from repro.analysis import validate
 from repro.api import KPGMSampler, MAGMSampler, SamplerConfig
 from repro.core import kpgm, kron, magm, quilt
 
+# multi-seed n=2^12 sampling statistics: slow_stats CI job, not tier-1 fast
+pytestmark = pytest.mark.slow_stats
+
 THETA = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
 N = 1 << 12
 D = 12
