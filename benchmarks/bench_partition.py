@@ -8,7 +8,7 @@ import numpy as np
 
 from benchmarks.common import THETA_1, emit, time_call
 from repro.api import MAGMSampler, SamplerConfig
-from repro.core import magm, partition
+from repro.core import balldrop, magm, partition
 
 # timing the full quilt above this d would need multi-GB candidate buffers
 # on a CPU host; larger n keep the (cheap) partition-size study only
@@ -59,6 +59,44 @@ def run(max_d: int = 16) -> None:
             f"B={plan.B};cost={plan.bd_cost:.1f};"
             f"mean_edges={plan.bd_mean:.0f}",
         )
+
+    # heavy-config short-circuit: skewed mu inflates B = c_max, exactly
+    # where the B^2 m / (c^T P c) rejection factor bites — and where the
+    # dense-inverse lookup costs B * 2^d entries while the by-config
+    # triple stays at 2^(d+1) + n.  Both paths are bit-identical
+    # (tests/test_sanitizers.py); these rows pin the short-circuit's
+    # per-call time next to the dense gather it replaces at a FIXED
+    # explicit target (per-proposal throughput — the full |E| draw at
+    # these mu is dominated by the rejection factor itself, cost ~ 5e3
+    # at mu=0.9, and would swamp the lookup comparison).
+    heavy_mus = (0.75,) if max_d <= 12 else (0.75, 0.9)
+    for mu in heavy_mus:
+        d = 10
+        n = 2**d
+        params = magm.make_params(THETA_1, mu, d)
+        F = np.asarray(
+            magm.sample_attributes(jax.random.PRNGKey(d), n, params.mu)
+        )
+        sampler = MAGMSampler(
+            SamplerConfig(params=params, F=F, backend="balldrop")
+        )
+        plan = sampler.plan
+        tgt = np.array([4096], dtype=np.int64)
+        lookups = (
+            ("inverse", plan, plan.B * (1 << d)),
+            ("byconfig", plan._replace(inv=None), 2 * (1 << d) + n),
+        )
+        for tag, p, entries in lookups:
+            t = time_call(
+                lambda p=p: balldrop.balldrop_run(
+                    jax.random.PRNGKey(77), p, targets=tgt
+                ).edges()
+            )
+            emit(
+                f"balldrop_heavy_{tag}_mu{mu}_n{n}", t,
+                f"B={plan.B};cost={plan.bd_cost:.1f};"
+                f"lookup_entries={entries}",
+            )
 
     # partition-size study continues past the timed range
     for d in range(min(max_d, QUILT_TIME_MAX_D) + 1, max_d + 1):

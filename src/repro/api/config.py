@@ -54,6 +54,14 @@ class SamplerConfig:
     split:
         Use the Section-5 split sampler (heavy configs as ER blocks,
         light nodes quilted) instead of the pure quilt.
+    exact_cells:
+        Exact-cell Bernoulli mode of the device engines (None = auto: on
+        for MAGM sessions, which pass no explicit targets).  One
+        plan-constant round with per-cell acceptance thinning makes cell
+        inclusion exactly Bernoulli(p) — fixing the high-Q collision
+        deficit of the drawn-target law — and gives warm sessions a
+        zero-recompile hot path.  ``False`` forces the legacy drawn-target
+        rounds (KPGM sessions do, to keep their target-count contract).
     dtype:
         Integer dtype of emitted edge arrays (checked against n at
         session build).
@@ -88,6 +96,7 @@ class SamplerConfig:
     max_rounds: int = 8
     bprime: Optional[int] = None
     split: bool = False
+    exact_cells: Optional[bool] = None
     dtype: Any = np.int64
 
     def __post_init__(self) -> None:
@@ -103,6 +112,12 @@ class SamplerConfig:
         if int(self.max_rounds) < 1:
             raise ValueError(
                 f"max_rounds must be >= 1, got {self.max_rounds}"
+            )
+        if self.exact_cells is not None and not isinstance(
+            self.exact_cells, bool
+        ):
+            raise ValueError(
+                f"exact_cells must be None or a bool, got {self.exact_cells!r}"
             )
         if np.dtype(self.dtype).kind not in "iu":
             raise ValueError(

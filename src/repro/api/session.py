@@ -254,6 +254,7 @@ class MAGMSampler(_Session):
             backend=c.backend,
             use_kernel=c.use_kernel,
             mesh=self.mesh,
+            exact_cells=c.exact_cells,
         )
 
     def _split_sample(self, key: jax.Array):
@@ -447,6 +448,13 @@ class KPGMSampler(_Session):
             backend=c.backend,
             use_kernel=c.use_kernel,
             mesh=self.mesh,
+            # KPGM sessions report/honor a drawn edge-count target
+            # (KPGMStats.target_edges, num_edges=): the legacy ranked
+            # rounds are that contract, so exact-cell stays off unless the
+            # config explicitly opts in
+            exact_cells=(
+                False if c.exact_cells is None else c.exact_cells
+            ),
         )
 
     def _host_sample(self, key, num_edges) -> GraphSample:

@@ -38,6 +38,7 @@ block-pair sharding is.
 from __future__ import annotations
 
 import functools
+import math
 import warnings
 from typing import List, Optional, Tuple
 
@@ -61,6 +62,7 @@ DISPATCH_COUNTERS = {
     "host_topup_rounds": 0,
     "mesh_degrades": 0,
     "degraded_fallbacks": 0,
+    "exact_fallbacks": 0,
 }
 
 
@@ -69,12 +71,14 @@ def _bd_round_body(
     gids: jax.Array,
     targets: jax.Array,
     cum: jax.Array,
+    thetas: jax.Array,
     tables,
     *,
     rounds: Tuple[int, ...],
     num_blocks: int,
     node_bits: int,
     use_kernel: bool,
+    exact: bool = False,
 ):
     """Per-shard fused ball-dropping round over a chunk of samples.
 
@@ -85,6 +89,20 @@ def _bd_round_body(
     via ``valid=`` — a miss is the rejection step, so only accepted balls
     rank against the per-sample target.  Returns (snode, dnode, take,
     counts); call under dedup.call_x64.
+
+    ``tables`` selects the rank lookup: ``(table_cfg, table_node)`` for the
+    Pallas kernel, ``(inv,)`` for the dense-inverse gather, or the
+    ``(cfg_offset, cfg_count, cfg_nodes)`` by-config triple — the
+    heavy-config short-circuit, where rank kb hits config x iff
+    ``kb < c_x`` and indexes straight into x's node group (bit-identical
+    to the dense inverse via the stable occurrence-rank order, but
+    O(2^d + n) memory instead of O(B * 2^d), the win for skewed mu where
+    B = c_max is large).
+
+    ``exact=True`` composes the per-NODE-pair acceptance thinning of
+    ``quilt._exact_cell_valid`` into the valid mask (pi = p_xy / (S B^2)
+    per proposal via ``log_extra = 2 log B``), making node-pair inclusion
+    exactly Bernoulli(Q_ij) in one plan-constant round.
     """
     d = cum.shape[0]
     gc = gids.shape[0]
@@ -118,9 +136,19 @@ def _bd_round_body(
     kb, lb = kl[:, 0], kl[:, 1]
     if use_kernel:
         table_cfg, table_node = tables
-        _, _, snode, dnode = ops.quilt_descent_lookup_pallas(
+        scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
             u, cum, kb, lb, table_cfg, table_node
         )
+    elif len(tables) == 3:
+        # by-config short-circuit: rank kb names config x's kb-th node
+        # directly (hit iff kb < c_x), no block table at all
+        cfg_offset, cfg_count, cfg_nodes = tables
+        scfg, dcfg = kpgm._descend(u, cum)
+        cs, cd = cfg_count[scfg], cfg_count[dcfg]
+        idx_s = cfg_offset[scfg] + jnp.minimum(kb, jnp.maximum(cs - 1, 0))
+        idx_d = cfg_offset[dcfg] + jnp.minimum(lb, jnp.maximum(cd - 1, 0))
+        snode = jnp.where(kb < cs, cfg_nodes[idx_s], jnp.int32(-1))
+        dnode = jnp.where(lb < cd, cfg_nodes[idx_d], jnp.int32(-1))
     else:
         (inv,) = tables
         scfg, dcfg = kpgm._descend(u, cum)
@@ -131,6 +159,20 @@ def _bd_round_body(
     local = (jnp.arange(gc * a_tot, dtype=jnp.int32) // a_tot).astype(
         jnp.int32
     )
+    if exact:
+        pair = snode.astype(jnp.int64) * jnp.int64(
+            1 << node_bits
+        ) + dnode.astype(jnp.int64)
+        valid = valid & quilt._exact_cell_valid(
+            rkey,
+            gids[local],
+            scfg,
+            dcfg,
+            thetas,
+            rounds[0],
+            log_extra=2.0 * math.log(float(num_blocks)),
+            cell=pair,
+        )
     cum_asks = jnp.arange(1, gc + 1, dtype=jnp.int32) * a_tot
     take, counts = dedup.segmented_unique_mask(
         local, snode, dnode, cum_asks, targets,
@@ -148,6 +190,7 @@ def _compiled_bd_round(
     node_bits: int,
     use_kernel: bool,
     num_tables: int,
+    exact: bool = False,
 ):
     """Jit (and, with a mesh, shard_map over the sample axis) one round."""
     body = functools.partial(
@@ -156,6 +199,7 @@ def _compiled_bd_round(
         num_blocks=num_blocks,
         node_bits=node_bits,
         use_kernel=use_kernel,
+        exact=exact,
     )
     if mesh is not None:
         spec = jax.sharding.PartitionSpec(axes)
@@ -163,7 +207,7 @@ def _compiled_bd_round(
         body = _shard_map(
             body,
             mesh=mesh,
-            in_specs=(rep, spec, spec, rep, (rep,) * num_tables),
+            in_specs=(rep, spec, spec, rep, rep, (rep,) * num_tables),
             out_specs=(spec,) * 4,
             check_rep=False,
         )
@@ -298,6 +342,7 @@ def balldrop_run(
     oversample: float = 1.05,
     use_kernel: Optional[bool] = None,
     mesh=None,
+    exact_cells: Optional[bool] = None,
 ) -> quilt.QuiltRun:
     """Execute the ball-dropping engine for a prebuilt QuiltPlan.
 
@@ -308,6 +353,15 @@ def balldrop_run(
     built past the ``kron.MOMENT_CAP`` gate (no ball-dropping moments), and
     :class:`quilt.DeviceBatchUnavailable` for fused batches over the device
     candidate budget.
+
+    ``exact_cells`` behaves as on :func:`quilt.quilt_run`: defaulting to on
+    when no explicit ``targets`` is given, one plan-constant round of
+    ``quilt._exact_budget(p_max, mean_edges * B^2)`` proposals per sample
+    with per-node-pair acceptance thinning makes edge inclusion exactly
+    Bernoulli(Q_ij) — no drawn target, no top-up, zero warm recompiles.
+    Ineligible runs (explicit targets, budget past the device cap) take
+    the legacy drawn-target rounds and bump
+    ``DISPATCH_COUNTERS["exact_fallbacks"]``.
     """
     S = int(num_samples)
     n = plan.n
@@ -317,11 +371,37 @@ def balldrop_run(
             f"this plan was built without them (2^d > {kron.MOMENT_CAP}"
             " configurations, or an empty partition)"
         )
+    targets_given = targets is not None
+
+    if use_kernel is None:
+        use_kernel = not ops.INTERPRET
+    # rank-lookup preference off-kernel: dense inverse (one gather) when it
+    # exists, else the by-config short-circuit (O(2^d + n) memory) — only
+    # force the kernel when neither table was built
+    if not use_kernel and plan.inv is None and plan.cfg_offset is None:
+        use_kernel = True
+
+    exact = (not targets_given) if exact_cells is None else bool(exact_cells)
+    exact = exact and not targets_given and plan.B > 0 and S > 0
+    budget = None
+    if exact:
+        # each proposal hits a GIVEN node pair with pi = p_xy / (S B^2):
+        # the descent picks the config cell, the two uniform ranks pick the
+        # pair's occurrence ranks
+        budget = quilt._exact_budget(
+            plan.p_max, plan.mean_edges * float(plan.B) ** 2
+        )
+        if budget is None or S * budget > kpgm.DEVICE_MAX_CANDIDATES:
+            DISPATCH_COUNTERS["exact_fallbacks"] += 1
+            exact = False
+            budget = None
 
     key, sub = jax.random.split(key)
-    if targets is None:
+    if exact:
+        targets = np.full(S, budget, dtype=np.int64)
+    elif targets is None:
         draws = (
-            np.asarray(jax.random.normal(sub, (S,))) * plan.bd_std
+            jax.device_get(jax.random.normal(sub, (S,))) * plan.bd_std
             + plan.bd_mean
         )
         targets = np.clip(np.round(draws), 0, n * n).astype(np.int64)
@@ -331,20 +411,18 @@ def balldrop_run(
         )
     total = int(targets.sum())
 
-    if use_kernel is None:
-        use_kernel = not ops.INTERPRET
-    if plan.inv is None and not use_kernel:
-        use_kernel = True
-
     from repro.dist import sharding as _dist_sharding
 
     layout = _dist_sharding.graph_layout(mesh, S)
     axes, s_pad = layout.axes, layout.padded
     if not axes:
         mesh = None
-    ask0 = dedup.uniform_ask(targets, oversample * plan.bd_cost)
+    ask0 = (
+        budget if exact
+        else dedup.uniform_ask(targets, oversample * plan.bd_cost)
+    )
     # layout-invariant device decision, like quilt_run's (S, not s_pad)
-    use_device = S * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
+    use_device = exact or S * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
     if not use_device:
         if S > 1:
             raise quilt.DeviceBatchUnavailable(
@@ -382,13 +460,19 @@ def balldrop_run(
 
     if total > 0:
         gids_j, tpad_j = quilt._pad_inputs(S, s_pad, targets)
-        tables = (
-            (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
-        )
+        if use_kernel:
+            tables = (plan.table_cfg, plan.table_node)
+        elif plan.inv is not None:
+            tables = (plan.inv,)
+        else:
+            tables = (plan.cfg_offset, plan.cfg_count, plan.cfg_nodes)
         rounds: Tuple[int, ...] = ()
-        for r in range(max_rounds):
+        for r in range(1 if exact else max_rounds):
             chaos.maybe_fail("quilt.round")
-            ask = dedup.uniform_ask(shortfall, oversample * plan.bd_cost)
+            ask = (
+                budget if exact
+                else dedup.uniform_ask(shortfall, oversample * plan.bd_cost)
+            )
             if ask == 0:
                 break
             if rounds and S * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
@@ -402,10 +486,11 @@ def balldrop_run(
                     chaos.maybe_fail("quilt.dispatch")
                     fn = _compiled_bd_round(
                         mesh, axes, rounds, plan.B, nb, use_kernel,
-                        len(tables),
+                        len(tables), exact,
                     )
                     outs = dedup.call_x64(
-                        fn, rkey, gids_j, tpad_j, plan.cum, tables
+                        fn, rkey, gids_j, tpad_j, plan.cum, plan.thetas,
+                        tables,
                     )
                     break
                 except chaos.DeviceLoss as exc:
@@ -418,8 +503,8 @@ def balldrop_run(
             DISPATCH_COUNTERS[
                 "device_rounds" if r == 0 else "device_topup_rounds"
             ] += 1
-            counts = np.asarray(outs[3]).astype(np.int64)[:S]
-            shortfall = targets - counts
+            counts = jax.device_get(outs[3]).astype(np.int64)[:S]
+            shortfall = np.zeros_like(targets) if exact else targets - counts
             if shortfall.max(initial=0) <= 0:
                 break
         a_tot = sum(rounds)
@@ -430,7 +515,7 @@ def balldrop_run(
         snode, dnode, take, _ = outs
         # the dedup's valid mask already excludes lookup misses, so taken
         # rows are accepted balls: keep == take (and counts == keep sums)
-        keep = np.asarray(take)
+        keep = jax.device_get(take)
         if shortfall.max(initial=0) > 0:
             DISPATCH_COUNTERS["degraded_fallbacks"] += 1
             warnings.warn(
@@ -443,10 +528,10 @@ def balldrop_run(
                 stacklevel=2,
             )
             flat_taken = (
-                np.asarray(snode)[keep].astype(np.int64) * n
-                + np.asarray(dnode)[keep].astype(np.int64)
+                jax.device_get(snode)[keep].astype(np.int64) * n
+                + jax.device_get(dnode)[keep].astype(np.int64)
             )
-            full_counts = np.asarray(outs[3]).astype(np.int64)
+            full_counts = jax.device_get(outs[3]).astype(np.int64)
             seen_pairs = list(
                 np.split(flat_taken, np.cumsum(full_counts)[:-1])
             )[:S]
@@ -455,6 +540,8 @@ def balldrop_run(
                 max_rounds, oversample,
             )
 
+    if exact:
+        targets = counts.copy()
     return quilt.QuiltRun(
         plan, S, targets, counts, snode, dnode, keep, a_tot, tuple(tail),
         None, None, sampler="balldrop",

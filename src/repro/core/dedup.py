@@ -210,8 +210,8 @@ def iter_edge_chunks(
             k = keep[lo : lo + window]
             if not k.any():
                 continue
-            s = np.asarray(src[lo : lo + window])[k]
-            d = np.asarray(dst[lo : lo + window])[k]
+            s = jax.device_get(src[lo : lo + window])[k]
+            d = jax.device_get(dst[lo : lo + window])[k]
             yield np.stack([s, d], axis=1)
         for t in tail:
             yield t

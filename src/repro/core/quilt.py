@@ -69,6 +69,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import math
 import warnings
 from collections import OrderedDict
 from typing import List, NamedTuple, Optional, Tuple
@@ -141,6 +142,17 @@ class QuiltPlan(NamedTuple):
     bd_mean: Optional[float] = None
     bd_std: Optional[float] = None
     bd_cost: Optional[float] = None
+    # largest single-cell probability prod_k max(theta^(k)) — sizes the
+    # exact-cell proposal budget (see _exact_budget)
+    p_max: Optional[float] = None
+    # by-config dense lookup: nodes grouped by configuration in occurrence
+    # (node-index) order.  cfg_nodes[cfg_offset[x] + b] is the SAME node as
+    # partition.dense_inverse[b, x] in O(2^d + n) memory instead of
+    # O(B * 2^d) — the ball-dropping rank lookup for skewed mu, where
+    # B = c_max makes the dense inverse blow past DENSE_INV_CAP
+    cfg_offset: Optional[jax.Array] = None  # (2^d,) int32 exclusive prefix
+    cfg_count: Optional[jax.Array] = None  # (2^d,) int32 multiplicities
+    cfg_nodes: Optional[jax.Array] = None  # (n,) int32 grouped node ids
 
     @property
     def num_graphs(self) -> int:
@@ -201,11 +213,21 @@ def _partition_state(F: np.ndarray, d: int):
         if part.B and part.B * (1 << d) <= DENSE_INV_CAP
         else None
     )
-    return part, tables, inv_np
+    bycfg_np = None
+    if part.B and 2 * (1 << d) <= DENSE_INV_CAP:
+        # stable sort groups nodes by config in node-index order — exactly
+        # the Theorem-2 occurrence-rank order, so entry b of config x's
+        # group is block b's node for x (bit-identical to dense_inverse)
+        count = np.bincount(lam, minlength=1 << d).astype(np.int32)
+        offset = np.zeros(1 << d, dtype=np.int32)
+        offset[1:] = np.cumsum(count[:-1])
+        nodes = np.argsort(lam, kind="stable").astype(np.int32)
+        bycfg_np = (offset, count, nodes)
+    return part, tables, inv_np, bycfg_np
 
 
 def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
-    part, tables, inv_np = part_state
+    part, tables, inv_np, bycfg_np = part_state
     n, d = F.shape
     th_dev = jnp.asarray(th)
     cum = kpgm._level_cumprobs(th_dev)
@@ -230,6 +252,10 @@ def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
         bd_mean=bd_mean,
         bd_std=bd_std,
         bd_cost=bd_cost,
+        p_max=float(np.prod(np.max(np.asarray(th), axis=(1, 2)))),
+        cfg_offset=jnp.asarray(bycfg_np[0]) if bycfg_np else None,
+        cfg_count=jnp.asarray(bycfg_np[1]) if bycfg_np else None,
+        cfg_nodes=jnp.asarray(bycfg_np[2]) if bycfg_np else None,
     )
     PLAN_STATS["plan_builds"] += 1
     return plan
@@ -326,17 +352,111 @@ DISPATCH_COUNTERS = {
     "host_topup_rounds": 0,
     "mesh_degrades": 0,
     "degraded_fallbacks": 0,
+    "exact_fallbacks": 0,
 }
 
 
 def _pad_inputs(gtot: int, g_pad: int, targets: np.ndarray):
     """(gids, targets) padded to ``g_pad`` as device arrays; padding rows
-    carry gid 0 / target 0, so they never emit."""
+    carry gid 0 / target 0, so they never emit.  Transfers are explicit
+    (``device_put``) so the hot path stays clean under
+    ``jax.transfer_guard("disallow")``."""
     gids = np.zeros(g_pad, dtype=np.int32)
     gids[:gtot] = np.arange(gtot, dtype=np.int32)
     tpad = np.zeros(g_pad, dtype=np.int32)
     tpad[:gtot] = targets
-    return jnp.asarray(gids), jnp.asarray(tpad)
+    return jax.device_put(gids), jax.device_put(tpad)
+
+
+def _exact_budget(p_max: Optional[float], mean_edges: float) -> Optional[int]:
+    """Fixed per-graph proposal count G for the exact-cell mode.
+
+    Quadrant descent proposes cell c with probability pi_c = p_c / S
+    (S = sum of cell probabilities = ``mean_edges``), so after G iid
+    proposals the cell is occupied with q_c = 1 - (1 - pi_c)^G.  The
+    smallest G with q_c >= p_c for EVERY cell (so acceptance thinning
+    alpha_c = p_c / q_c <= 1 can hit the exact Bernoulli(p_c) marginal) is
+    log(1 - p) / log(1 - p / S) at p = p_max — the ratio is increasing in
+    p.  Returns None when no usable finite budget exists.
+    """
+    if p_max is None or mean_edges <= 0.0:
+        return None
+    # cells with p within float-eps of 1 would need an unbounded budget;
+    # clipping concedes a <=1e-6 relative bias for those cells only
+    p = min(float(p_max), 1.0 - 1e-6)
+    S = max(float(mean_edges), p)
+    if p <= 0.0:
+        return 1
+    ratio = p / S
+    if ratio >= 1.0:
+        return 1
+    g = math.log1p(-p) / math.log1p(-ratio)
+    if not math.isfinite(g) or g > float(kpgm.DEVICE_MAX_CANDIDATES):
+        return None
+    return max(int(math.ceil(g)), 1)
+
+
+def _accept_u01(salt: jax.Array, gid: jax.Array, cell: jax.Array) -> jax.Array:
+    """Deterministic uniform in [0, 1) per (salt, graph, cell): a
+    splitmix64-style finalizer over the packed ids.
+
+    Every duplicate candidate of one cell hashes identically, so the
+    acceptance test of the exact-cell mode keeps or kills the CELL as a
+    unit; keyed by the global graph id + a salt derived from the round key,
+    it is layout-invariant under mesh sharding.  Needs x64 (call under
+    dedup.call_x64).
+    """
+    x = (
+        salt
+        ^ (gid.astype(jnp.uint64) * jnp.uint64(0x9E3779B97F4A7C15))
+        ^ (cell.astype(jnp.uint64) * jnp.uint64(0xC2B2AE3D27D4EB4F))
+    )
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return (x >> jnp.uint64(40)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def _exact_cell_valid(
+    rkey: jax.Array,
+    gid: jax.Array,
+    scfg: jax.Array,
+    dcfg: jax.Array,
+    thetas: jax.Array,
+    budget: int,
+    log_extra: float = 0.0,
+    cell: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Per-candidate accept mask making cell inclusion exactly Bernoulli(p).
+
+    ``q = 1 - (1 - pi)^G`` is the cell's occupancy probability under this
+    round's G proposals (pi = p / S / exp(log_extra); ``log_extra`` adds the
+    ball-dropping rank factor log B^2), and the cell survives with
+    probability alpha = p / q, decided by the shared per-cell hash — so the
+    marginal is q * alpha = p exactly.  Composes into ``valid=`` of
+    dedup.segmented_unique_mask: a rejected cell never emits, an accepted
+    one emits its arrival-order first occurrence.
+    """
+    d = thetas.shape[0]
+    logp = kpgm.log_prob_pairs(thetas, scfg, dcfg)
+    log_s = jnp.sum(jnp.log(jnp.sum(thetas, axis=(1, 2))))
+    logpi = (logp - log_s - log_extra).astype(jnp.float32)
+    pi = jnp.exp(logpi)
+    q = -jnp.expm1(jnp.float32(budget) * jnp.log1p(-pi))
+    alpha = jnp.minimum(
+        jnp.exp(logp.astype(jnp.float32) - jnp.log(q)), 1.0
+    )
+    salt = jax.random.bits(
+        jax.random.fold_in(rkey, 0x5EED), (), jnp.uint64
+    )
+    if cell is None:
+        # quilt: the dedup unit IS the config cell.  Ball dropping passes
+        # the packed NODE pair instead (many node pairs share one config
+        # pair but must draw independent accept bits).
+        cell = scfg.astype(jnp.int64) * jnp.int64(1 << d) + dcfg.astype(
+            jnp.int64
+        )
+    return _accept_u01(salt, gid, cell) < alpha
 
 
 def _degrade_layout(mesh, exc: "chaos.DeviceLoss", gtot: int, counters=None):
@@ -375,11 +495,13 @@ def _round_body(
     gids: jax.Array,
     targets: jax.Array,
     cum: jax.Array,
+    thetas: jax.Array,
     tables,
     *,
     rounds: Tuple[int, ...],
     num_blocks: int,
     use_kernel: bool,
+    exact: bool = False,
 ):
     """Per-shard fused quilting round over a chunk of block-pair graphs.
 
@@ -398,6 +520,14 @@ def _round_body(
     kernel path or (inv,) for the jnp dense-gather path (CPU).  No
     collectives: with shard_map, the caller's gather of the outputs is the
     only cross-device step.
+
+    ``exact=True`` is the exact-cell mode (single round, plan-constant
+    budget): instead of ranking first-N-distinct cells against a drawn
+    target, every proposed cell passes the per-cell acceptance thinning of
+    :func:`_exact_cell_valid`, making cell inclusion exactly Bernoulli(p) —
+    the fix for the high-Q collision deficit the MAGFIT recovery suite
+    surfaced.  ``targets`` then only carries the (never-binding) budget cap
+    and the zero rows that mute mesh padding.
     """
     d = cum.shape[0]
     gc = gids.shape[0]
@@ -437,8 +567,17 @@ def _round_body(
         snode = flat[(kb << d) | scfg]
         dnode = flat[(lb << d) | dcfg]
     cum_asks = jnp.arange(1, gc + 1, dtype=jnp.int32) * a_tot
+    valid = None
+    if exact:
+        # fold the occurrence-lookup misses in too: counts then equal the
+        # realized per-graph edge totals (QuiltRun.targets in exact mode)
+        valid = (
+            (snode >= 0)
+            & (dnode >= 0)
+            & _exact_cell_valid(rkey, gid, scfg, dcfg, thetas, rounds[0])
+        )
     take, counts = dedup.segmented_unique_mask(
-        local, scfg, dcfg, cum_asks, targets, node_bits=d
+        local, scfg, dcfg, cum_asks, targets, node_bits=d, valid=valid
     )
     return scfg, dcfg, snode, dnode, take, counts
 
@@ -451,17 +590,22 @@ def _compiled_round(
     num_blocks: int,
     use_kernel: bool,
     num_tables: int,
+    exact: bool = False,
 ):
     """Jit (and, with a mesh, shard_map) one round program.
 
     Cached so repeated samples of the same shape reuse the compiled program;
     keyed by the mesh object, the resolved graph axes and the static sizes.
+    In the exact-cell mode every static here is a plan constant, so warm
+    sessions never recompile across keys (the recompile-budget sanitizer
+    pins this).
     """
     body = functools.partial(
         _round_body,
         rounds=rounds,
         num_blocks=num_blocks,
         use_kernel=use_kernel,
+        exact=exact,
     )
     if mesh is not None:
         spec = jax.sharding.PartitionSpec(axes)
@@ -469,7 +613,7 @@ def _compiled_round(
         body = _shard_map(
             body,
             mesh=mesh,
-            in_specs=(rep, spec, spec, rep, (rep,) * num_tables),
+            in_specs=(rep, spec, spec, rep, rep, (rep,) * num_tables),
             out_specs=(spec,) * 6,
             check_rep=False,
         )
@@ -534,8 +678,8 @@ class QuiltRun(NamedTuple):
             return np.concatenate(self.edges_per_sample(), axis=0)
         pieces: List[np.ndarray] = []
         if self.keep is not None and self.keep.any():
-            sn = np.asarray(self.snode)
-            dn = np.asarray(self.dnode)
+            sn = jax.device_get(self.snode)
+            dn = jax.device_get(self.dnode)
             pieces.append(
                 np.stack(
                     [sn[self.keep], dn[self.keep]], axis=1
@@ -576,8 +720,8 @@ class QuiltRun(NamedTuple):
             return [self.host_edges]
         per: List[List[np.ndarray]] = [[] for _ in range(S)]
         if self.keep is not None and self.keep.any():
-            sn = np.asarray(self.snode)
-            dn = np.asarray(self.dnode)
+            sn = jax.device_get(self.snode)
+            dn = jax.device_get(self.dnode)
             idx = np.flatnonzero(self.keep)
             samp = (idx // max(self.slots_per_graph, 1)) // G
             dev = np.stack([sn[idx], dn[idx]], axis=1).astype(np.int64)
@@ -637,6 +781,7 @@ def quilt_run(
     backend: str = "auto",
     use_kernel: Optional[bool] = None,
     mesh=None,
+    exact_cells: Optional[bool] = None,
 ) -> QuiltRun:
     """Execute the quilting engine for a prebuilt plan; returns a QuiltRun.
 
@@ -648,6 +793,20 @@ def quilt_run(
     backend decision resolves to host.  ``targets`` overrides the per-graph
     Normal(m, m - v) edge-count draw (the key is split identically either
     way, so the candidate streams don't depend on the override).
+
+    ``exact_cells`` selects the exact-cell mode (default: on exactly when
+    no ``targets`` override is given): ONE fixed-shape round of
+    :func:`_exact_budget` proposals per graph with per-cell acceptance
+    thinning, so each cell appears with exactly its Bernoulli probability
+    instead of the first-N-distinct law ``1 - (1 - p/S)^N`` whose high-Q
+    deficit the MAGFIT recovery suite surfaced.  The round shape is a plan
+    constant — warm sessions re-dispatch one cached program for every key
+    (zero recompiles).  Runs that cannot take it (explicit targets, host
+    backend, budget past DEVICE_MAX_CANDIDATES) fall back to the legacy
+    ranked rounds, counted in ``DISPATCH_COUNTERS["exact_fallbacks"]``;
+    ``exact_cells=False`` forces the legacy path (the KPGM sessions do, to
+    keep their drawn-target contract).  ``QuiltRun.targets`` equals the
+    realized counts in exact mode.
 
     ``backend="balldrop"`` dispatches to the ball-dropping engine
     (core/balldrop.py, arXiv:1202.6001): same plan, same QuiltRun surface,
@@ -666,29 +825,13 @@ def quilt_run(
             oversample=oversample,
             use_kernel=use_kernel,
             mesh=mesh,
+            exact_cells=exact_cells,
         )
     S = int(num_samples)
     G = plan.num_graphs
     gtot = S * G
     ncfg = 1 << plan.d
     targets_given = targets is not None
-
-    key, sub = jax.random.split(key)
-    if targets is None:
-        draws = (
-            np.asarray(jax.random.normal(sub, (gtot,))) * plan.std_edges
-            + plan.mean_edges
-        )
-        targets = np.clip(
-            np.round(draws), 0, min(ncfg * ncfg, 2**62)
-        ).astype(np.int64)
-    else:
-        targets = np.clip(
-            np.asarray(targets, dtype=np.int64).reshape(gtot),
-            0,
-            min(ncfg * ncfg, 2**62),
-        )
-    total = int(targets.sum())
 
     if use_kernel is None:
         use_kernel = not ops.INTERPRET
@@ -697,18 +840,55 @@ def quilt_run(
         # kernel path is the only device lookup that exists at this size
         use_kernel = True
 
+    exact = (not targets_given) if exact_cells is None else bool(exact_cells)
+    exact = (
+        exact
+        and not targets_given
+        and backend in ("auto", "device")
+        and (plan.inv is not None or use_kernel)
+        and gtot > 0
+    )
+    budget = _exact_budget(plan.p_max, plan.mean_edges) if exact else None
+    if exact and (
+        budget is None or gtot * budget > kpgm.DEVICE_MAX_CANDIDATES
+    ):
+        DISPATCH_COUNTERS["exact_fallbacks"] += 1
+        exact = False
+
+    key, sub = jax.random.split(key)
+    if exact:
+        targets = np.full(gtot, budget, dtype=np.int64)
+        ask0 = budget
+    elif targets is None:
+        draws = (
+            jax.device_get(jax.random.normal(sub, (gtot,)))
+            * plan.std_edges
+            + plan.mean_edges
+        )
+        targets = np.clip(
+            np.round(draws), 0, min(ncfg * ncfg, 2**62)
+        ).astype(np.int64)
+        ask0 = dedup.uniform_ask(targets, oversample)
+    else:
+        targets = np.clip(
+            np.asarray(targets, dtype=np.int64).reshape(gtot),
+            0,
+            min(ncfg * ncfg, 2**62),
+        )
+        ask0 = dedup.uniform_ask(targets, oversample)
+    total = int(targets.sum())
+
     from repro.dist import sharding as _dist_sharding
 
     layout = _dist_sharding.graph_layout(mesh, gtot)
     axes, g_pad = layout.axes, layout.padded
     if not axes:
         mesh = None  # no usable graph axis: run the unsharded program
-    ask0 = dedup.uniform_ask(targets, oversample)
     # the backend decision must be LAYOUT-INVARIANT (gtot, not g_pad; no
     # nshards factor) or mesh and no-mesh runs could pick different
     # samplers near the cap and break the bit-identity contract; meshes
     # with spare aggregate memory can force backend="device" instead
-    use_device = backend == "device" or (
+    use_device = exact or backend == "device" or (
         backend == "auto"
         and (plan.inv is not None or use_kernel)
         and gtot * ask0 <= kpgm.DEVICE_MAX_CANDIDATES
@@ -749,9 +929,9 @@ def quilt_run(
             (plan.table_cfg, plan.table_node) if use_kernel else (plan.inv,)
         )
         rounds: Tuple[int, ...] = ()
-        for r in range(max_rounds):
+        for r in range(1 if exact else max_rounds):
             chaos.maybe_fail("quilt.round")
-            ask = dedup.uniform_ask(shortfall, oversample)
+            ask = budget if exact else dedup.uniform_ask(shortfall, oversample)
             if ask == 0:
                 break
             if rounds and gtot * (sum(rounds) + ask) > kpgm.DEVICE_MAX_CANDIDATES:
@@ -770,10 +950,12 @@ def quilt_run(
                 try:
                     chaos.maybe_fail("quilt.dispatch")
                     fn = _compiled_round(
-                        mesh, axes, rounds, plan.B, use_kernel, len(tables)
+                        mesh, axes, rounds, plan.B, use_kernel, len(tables),
+                        exact,
                     )
                     outs = dedup.call_x64(
-                        fn, rkey, gids_j, tpad_j, plan.cum, tables
+                        fn, rkey, gids_j, tpad_j, plan.cum, plan.thetas,
+                        tables,
                     )
                     break
                 except chaos.DeviceLoss as exc:
@@ -785,8 +967,10 @@ def quilt_run(
             DISPATCH_COUNTERS[
                 "device_rounds" if r == 0 else "device_topup_rounds"
             ] += 1
-            counts = np.asarray(outs[5]).astype(np.int64)[:gtot]
-            shortfall = targets - counts
+            counts = jax.device_get(outs[5]).astype(np.int64)[:gtot]
+            # exact mode has no shortfall concept: the thinning already
+            # realized each cell's Bernoulli draw, counts ARE the result
+            shortfall = np.zeros_like(targets) if exact else targets - counts
             if shortfall.max(initial=0) <= 0:
                 break
         a_tot = sum(rounds)
@@ -795,7 +979,12 @@ def quilt_run(
     snode = dnode = None
     if outs is not None:
         scfg, dcfg, snode, dnode, take, _ = outs
-        keep = np.asarray(take & (snode >= 0) & (dnode >= 0))
+        take_h = jax.device_get(take)
+        keep = (
+            take_h
+            & (jax.device_get(snode) >= 0)
+            & (jax.device_get(dnode) >= 0)
+        )
         if shortfall.max(initial=0) > 0:
             # pathological: max_rounds device rounds still short — fall back
             # to the PR-1 host rejection loop for the residual
@@ -809,12 +998,11 @@ def quilt_run(
                 RuntimeWarning,
                 stacklevel=2,
             )
-            take_h = np.asarray(take)
             flat_taken = (
-                np.asarray(scfg)[take_h].astype(np.int64) * ncfg
-                + np.asarray(dcfg)[take_h].astype(np.int64)
+                jax.device_get(scfg)[take_h].astype(np.int64) * ncfg
+                + jax.device_get(dcfg)[take_h].astype(np.int64)
             )
-            full_counts = np.asarray(outs[5]).astype(np.int64)
+            full_counts = jax.device_get(outs[5]).astype(np.int64)
             seen_cfg = list(
                 np.split(flat_taken, np.cumsum(full_counts)[:-1])
             )[:gtot]
@@ -824,6 +1012,10 @@ def quilt_run(
             key, plan, targets, counts, seen_cfg, tail, max_rounds, oversample
         )
 
+    if exact:
+        # the realized per-graph cell counts are the only meaningful
+        # "targets" of an exact run
+        targets = counts.copy()
     return QuiltRun(
         plan, S, targets, counts, snode, dnode, keep, a_tot, tuple(tail),
         None, None,
@@ -841,6 +1033,7 @@ def quilt_sample(
     use_kernel: Optional[bool] = None,
     mesh=None,
     return_stats: bool = False,
+    exact_cells: Optional[bool] = None,
 ) -> np.ndarray | Tuple[np.ndarray, QuiltStats]:
     """DEPRECATED shim over ``repro.api.MAGMSampler`` — sample one MAGM graph.
 
@@ -872,6 +1065,7 @@ def quilt_sample(
         backend=backend,
         use_kernel=use_kernel,
         mesh=mesh,
+        exact_cells=exact_cells,
     )
     out = run.edges()
     # Blocks are disjoint in node space (each (i, j) pair belongs to exactly
@@ -1179,10 +1373,17 @@ def rng_from_key(key: jax.Array) -> np.random.Generator:
     arr = jnp.asarray(key)
     if not jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
         key = jax.random.wrap_key_data(arr.astype(jnp.uint32))
-    sub = jax.random.fold_in(key, 0x5EED)
-    data = jax.random.key_data(sub)
+    # jitted so the fold constant is baked into one compiled program: an
+    # eager fold_in ships a fresh uint32 scalar host->device on EVERY call
+    # (caught by the transfer-guard sanitizer on the split hot path)
+    data = _fold_key_data(key)
     entropy = [int(x) for x in np.asarray(data, dtype=np.uint32).ravel()]
     return np.random.default_rng(entropy)
+
+
+@jax.jit
+def _fold_key_data(key: jax.Array) -> jax.Array:
+    return jax.random.key_data(jax.random.fold_in(key, 0x5EED))
 
 
 def split_run(

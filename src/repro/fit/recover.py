@@ -212,15 +212,18 @@ def exact_edges(
 ) -> np.ndarray:
     """Reference sampler: EXACT independent Bernoulli(Q_ij) edges.
 
-    The production backends approximate the per-pair Bernoulli draws with
-    ball-drop/quilting machinery whose residual collision (Poissonization)
-    deficit concentrates in the highest-Q cells — small (observed ~z 3-7
-    per config cell at n=4096, total counts unaffected), but a CONSISTENT
-    distortion, so an estimator fitted to backend output inherits a
-    same-sign theta bias (~0.01) that a bootstrap CI around the fitter
-    would wrongly attribute to the fitter.  Recovery tests that make
-    coverage statements about the FITTER therefore draw the observed
-    graph here: per-pair f64 Bernoulli via the 2^d config table, row
+    Historically the production backends approximated the per-pair
+    Bernoulli draws with a drawn-target law whose collision
+    (Poissonization) deficit concentrated in the highest-Q cells
+    (observed ~z 3-7 per config cell at n=4096, total counts unaffected)
+    — a CONSISTENT distortion that gave estimators fitted to backend
+    output a same-sign theta bias (~0.01).  The exact-cell acceptance
+    mode (``SamplerConfig.exact_cells``, default on for MAGM sessions;
+    see ``quilt._exact_cell_valid``) has since removed that deficit:
+    per-cell inclusion is exactly Bernoulli(p), pinned per cell by
+    ``tests/test_validation.py::test_per_cell_block_z``.  This host
+    reference remains the independent ground truth the device engines are
+    judged against: per-pair f64 Bernoulli via the 2^d config table, row
     blocks of ``block`` to bound memory.  Directed ordered pairs
     including self-loops, matching the model convention.
     """

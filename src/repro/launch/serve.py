@@ -352,9 +352,13 @@ class GraphServer:
 
     def close(self) -> None:
         """Stop accepting, drain in-flight requests, join the worker."""
-        if self._closed:
-            return
-        self._closed = True
+        with self._lock:
+            # two racing close() calls must not both enqueue the drain
+            # sentinel (the worker would exit after the first and leave
+            # the second blocked on a full queue)
+            if self._closed:
+                return
+            self._closed = True
         self._q.put(None)  # blocks until a slot frees; sentinel drains last
         self._worker.join()
 

@@ -1,0 +1,38 @@
+"""repro.lint — a JAX correctness linter for this codebase.
+
+A small AST-based static-analysis framework purpose-built for the
+invariants the device-resident sampling pipeline depends on: no host
+synchronisation inside jit-reachable code, disciplined PRNG key use, no
+recompile hazards in warm sessions, no bit-budget overflow in the packed
+dedup keys, no tracer leakage, no deprecated shims inside ``src/``, the
+``valid=`` sentinel remap before packing, and locked shared-state
+mutation in the serving worker.  See docs/STATIC_ANALYSIS.md for the
+rule catalog and pragma syntax.
+
+Usage::
+
+    python -m repro.lint src/            # human output, exit 1 on findings
+    python -m repro.lint --json src/     # machine output
+
+Suppression::
+
+    x = np.asarray(y)  # lint: disable=host-sync-in-jit -- why it is OK
+"""
+
+from repro.lint.engine import (
+    Finding,
+    LintEngine,
+    Rule,
+    lint_paths,
+    lint_source,
+)
+from repro.lint.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "LintEngine",
+    "Rule",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,142 @@
+"""Lightweight jit call graph for :mod:`repro.lint`.
+
+The host-sync and tracer-leak rules need to know which functions run
+UNDER a ``jax.jit`` trace.  Full name resolution is out of scope for a
+linter; instead this module builds a conservative graph over *simple*
+function names (the last component of a dotted call), which is exact
+enough for this codebase's flat ``module.function`` style:
+
+- **Roots** are functions marked jitted by any of the repo's idioms:
+  an ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorator, or a
+  ``jax.jit(expr)`` call whose argument expression (followed through
+  straight-line ``var = functools.partial(f, ...)`` / ``var =
+  _shard_map(var2, ...)`` assignments in the same scope) references the
+  function's name — the ``_compiled_round`` factory pattern.
+- **Edges** go from a function to every known function name it calls.
+
+``jit_reachable_names`` returns the transitive closure from the roots.
+A name shared by a jitted and a non-jitted function is treated as
+reachable (conservative: rules may flag the non-jitted twin, which a
+pragma can silence — missing a real host sync is the worse failure).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+__all__ = ["jit_reachable_names"]
+
+
+def _dotted_last(node: ast.AST):
+    """Simple name of a call target: f() -> f, mod.f() -> f."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / ``jit`` / ``pjit`` references."""
+    return _dotted_last(node) in ("jit", "pjit")
+
+
+def _decorator_roots(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True
+            # functools.partial(jax.jit, static_argnames=...)
+            if _dotted_last(dec.func) == "partial" and any(
+                _is_jax_jit(a) for a in dec.args
+            ):
+                return True
+    return False
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {
+        n.id for n in ast.walk(node) if isinstance(n, ast.Name)
+    }
+
+
+def _scope_jit_roots(scope: ast.AST) -> Set[str]:
+    """Function names fed to ``jax.jit(...)`` within one scope, following
+    ``var = functools.partial(f, ...)``-style straight-line aliases."""
+    alias: Dict[str, Set[str]] = {}
+
+    def resolve(names: Set[str], depth: int = 0) -> Set[str]:
+        if depth > 8:
+            return names
+        out: Set[str] = set()
+        for n in names:
+            if n in alias:
+                out |= resolve(alias[n], depth + 1)
+            else:
+                out.add(n)
+        return out
+
+    roots: Set[str] = set()
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            targets = [
+                t.id for t in node.targets if isinstance(t, ast.Name)
+            ]
+            if targets:
+                referenced = _names_in(node.value)
+                for t in targets:
+                    # union across re-assignments: ``body = _shard_map(
+                    # body, ...)`` must keep body's earlier binding to the
+                    # partial'd function
+                    alias[t] = alias.get(t, set()) | (referenced - {t})
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            for arg in node.args:
+                roots |= resolve(_names_in(arg))
+    return roots
+
+
+def _function_defs(trees: Iterable[ast.Module]):
+    for tree in trees:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+
+def jit_reachable_names(trees: List[ast.Module]) -> Set[str]:
+    """Simple names of all functions reachable from any jit root."""
+    defs: Dict[str, List[ast.FunctionDef]] = {}
+    for fn in _function_defs(trees):
+        defs.setdefault(fn.name, []).append(fn)
+
+    roots: Set[str] = set()
+    for tree in trees:
+        roots |= _scope_jit_roots(tree) & set(defs)
+    for fn_list in defs.values():
+        for fn in fn_list:
+            if _decorator_roots(fn):
+                roots.add(fn.name)
+
+    # edges: function name -> called known-function names
+    calls: Dict[str, Set[str]] = {}
+    for name, fn_list in defs.items():
+        out: Set[str] = set()
+        for fn in fn_list:
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = _dotted_last(node.func)
+                    if callee in defs and callee != name:
+                        out.add(callee)
+        calls[name] = out
+
+    reachable: Set[str] = set()
+    stack = sorted(roots)
+    while stack:
+        name = stack.pop()
+        if name in reachable:
+            continue
+        reachable.add(name)
+        stack.extend(sorted(calls.get(name, ()) - reachable))
+    return reachable

@@ -1,0 +1,788 @@
+"""The rule catalog of :mod:`repro.lint`.
+
+Every rule is grounded in a bug class this repo has actually hit (see
+docs/STATIC_ANALYSIS.md for the war stories and the pragma syntax):
+
+====================  =====================================================
+host-sync-in-jit      np.* / .item() / int()/float()/bool() on traced
+                      values inside jit-reachable functions
+prng-key-discipline   key reuse across draws, hard-coded seeds, raw keys
+                      bypassing rng_from_key
+recompile-hazard      fresh jax.jit wrappers per call (in loops / uncached
+                      factories)
+packed-bits-overflow  shift-or key packing that can exceed the target
+                      dtype width (node_bits+1 sentinel convention)
+tracer-leak           tracers stored on self/globals from jitted code
+deprecated-shim       src/ code calling the deprecation shims it ships
+missing-valid-mask    -1 sentinel producers feeding segmented_unique_mask
+                      without a valid= remap
+unlocked-shared-mutation  worker-class shared state mutated outside the
+                      lock
+====================  =====================================================
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.lint.engine import FileInfo, ProjectContext, Rule
+
+__all__ = ["ALL_RULES"]
+
+# attribute reads that stay static under tracing (never force a sync)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+# jax.random draws that CONSUME a key (split/fold_in derive, not consume)
+_KEY_CONSUMERS = {
+    "uniform", "normal", "randint", "bits", "bernoulli", "permutation",
+    "choice", "categorical", "gumbel", "exponential", "truncated_normal",
+    "gamma", "beta", "poisson", "laplace", "cauchy", "dirichlet",
+    "loggamma", "rademacher", "maxwell",
+}
+
+_INT_WIDTHS = {
+    "int64": 63, "uint64": 64, "int32": 31, "uint32": 32,
+    "int16": 15, "uint16": 16, "int8": 7, "uint8": 8,
+}
+
+
+def _last(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost name of a dotted expression: np.random.seed -> np."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _param_names(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg.arg)
+    if a.kwarg:
+        params.append(a.kwarg.arg)
+    return set(params)
+
+
+_SCALAR_ANNOTATIONS = {"int", "float", "bool", "str", "bytes"}
+
+
+def _static_argnames_of(fn: ast.FunctionDef) -> Set[str]:
+    """Param names declared static by the function's own jit decorator
+    (``static_argnames=...`` / ``static_argnums=...``)."""
+    positional = [
+        p.arg for p in fn.args.posonlyargs + fn.args.args
+    ]
+    static: Set[str] = set()
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        jitted = _last(dec.func) in ("jit", "pjit") or (
+            _last(dec.func) == "partial"
+            and any(_last(a) in ("jit", "pjit") for a in dec.args)
+        )
+        if not jitted:
+            continue
+        for kw in dec.keywords:
+            values = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.Tuple, ast.List))
+                else [kw.value]
+            )
+            consts = [
+                v.value for v in values if isinstance(v, ast.Constant)
+            ]
+            if kw.arg == "static_argnames":
+                static.update(c for c in consts if isinstance(c, str))
+            elif kw.arg == "static_argnums":
+                for c in consts:
+                    if isinstance(c, int) and 0 <= c < len(positional):
+                        static.add(positional[c])
+    return static
+
+
+def _traced_params(fn: ast.FunctionDef) -> Set[str]:
+    """Params that can hold traced arrays under jit.
+
+    Excludes, per this repo's conventions: ``self``; keyword-only params
+    (static plan configuration bound via ``functools.partial`` before
+    jit); params annotated with a Python scalar type (static by
+    contract); params in the function's own ``static_argnames`` /
+    ``static_argnums``.
+    """
+    a = fn.args
+    traced: Set[str] = set()
+    for p in a.posonlyargs + a.args:
+        ann = p.annotation
+        if ann is not None and _last(ann) in _SCALAR_ANNOTATIONS:
+            continue
+        traced.add(p.arg)
+    traced -= {"self"}
+    traced -= _static_argnames_of(fn)
+    return traced
+
+
+def _references(node: ast.AST, names: Set[str]) -> bool:
+    """Does ``node`` reference any of ``names`` other than through a
+    static attribute (.shape/.ndim/.dtype/.size)?"""
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in names
+    return any(
+        _references(c, names) for c in ast.iter_child_nodes(node)
+    )
+
+
+def _has_cache_decorator(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _last(target) in ("lru_cache", "cache"):
+            return True
+    return False
+
+
+class HostSyncInJit(Rule):
+    """R1 — host synchronisation inside jit-reachable code.
+
+    ``np.*`` calls, ``.item()``, and ``int()/float()/bool()`` casts force
+    the traced value to the host: under jit they either fail with a tracer
+    error at first call or, worse, silently freeze a traced value into a
+    compile-time constant.  Flagged only when an argument references a
+    function parameter (trace-time numpy on static shapes is fine), in
+    functions the project call graph marks jit-reachable.
+    """
+
+    name = "host-sync-in-jit"
+    description = "np.*/item()/int() on traced values in jitted code"
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            if fn.name not in project.jit_reachable:
+                continue
+            params = _traced_params(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = node.func
+                if (
+                    isinstance(callee, ast.Attribute)
+                    and callee.attr == "item"
+                    and not node.args
+                ):
+                    yield self.finding(
+                        info, node,
+                        f"`.item()` in jit-reachable `{fn.name}` forces a "
+                        "device sync (returns a Python scalar)",
+                    ), node
+                    continue
+                if (
+                    _root_name(callee) in ("np", "numpy")
+                    and isinstance(callee, ast.Attribute)
+                    and any(
+                        _references(a, params)
+                        for a in list(node.args)
+                        + [k.value for k in node.keywords]
+                    )
+                ):
+                    yield self.finding(
+                        info, node,
+                        f"numpy call `np.{callee.attr}` on a traced "
+                        f"argument of jit-reachable `{fn.name}`: use jnp "
+                        "(np forces a host round-trip or a tracer error)",
+                    ), node
+                    continue
+                if (
+                    isinstance(callee, ast.Name)
+                    and callee.id in ("int", "float", "bool")
+                    and node.args
+                    and _references(node.args[0], params)
+                ):
+                    yield self.finding(
+                        info, node,
+                        f"`{callee.id}()` on a traced argument of "
+                        f"jit-reachable `{fn.name}` concretizes the tracer",
+                    ), node
+
+
+class PrngKeyDiscipline(Rule):
+    """R2 — PRNG key hygiene.
+
+    (a) the same key variable consumed by two draws in one straight-line
+    block without an interleaving ``split``/``fold_in`` reuses the stream
+    (identical or correlated variates); (b) ``PRNGKey(<constant>)`` inside
+    library code hard-wires determinism callers cannot see; (c) jax keys
+    fed raw into numpy RNG constructors bypass ``rng_from_key``'s
+    canonicalization (uint32 words of a key are NOT a well-mixed numpy
+    seed).
+    """
+
+    name = "prng-key-discipline"
+    description = "key reuse / hard-coded seeds / raw keys around rng_from_key"
+
+    def _none_default_exempt(self, fn: ast.FunctionDef) -> Set[int]:
+        """ids of PRNGKey calls inside the ``x if x is not None else
+        PRNGKey(0)`` / ``if key is None: ...`` default idiom — a
+        caller-overridable documented default, not a buried seed."""
+        exempt: Set[int] = set()
+
+        def none_test(test: ast.expr) -> bool:
+            return (
+                isinstance(test, ast.Compare)
+                and len(test.ops) == 1
+                and isinstance(test.ops[0], (ast.Is, ast.IsNot))
+                and isinstance(test.comparators[0], ast.Constant)
+                and test.comparators[0].value is None
+            )
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.IfExp) and none_test(node.test):
+                scope: List[ast.AST] = [node.body, node.orelse]
+            elif isinstance(node, ast.If) and none_test(node.test):
+                scope = list(node.body)
+            else:
+                continue
+            for sub_root in scope:
+                for sub in ast.walk(sub_root):
+                    if (
+                        isinstance(sub, ast.Call)
+                        and _last(sub.func) == "PRNGKey"
+                    ):
+                        exempt.add(id(sub))
+        return exempt
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            yield from self._check_reuse(info, fn.body)
+            if fn.name == "rng_from_key":
+                continue  # the canonical router is allowed raw access
+            exempt = self._none_default_exempt(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if (
+                    _last(node.func) == "PRNGKey"
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and id(node) not in exempt
+                ):
+                    yield self.finding(
+                        info, node,
+                        "hard-coded `PRNGKey("
+                        f"{node.args[0].value!r})` in library code: thread "
+                        "a caller key (or pragma if the fixed default is "
+                        "the documented contract)",
+                    ), node
+                if _root_name(node.func) in ("np", "numpy") and _last(
+                    node.func
+                ) in ("default_rng", "RandomState", "seed", "Generator"):
+                    arg_names = {
+                        n.id
+                        for a in list(node.args)
+                        + [k.value for k in node.keywords]
+                        for n in ast.walk(a)
+                        if isinstance(n, ast.Name)
+                    }
+                    if any("key" in n.lower() for n in arg_names):
+                        yield self.finding(
+                            info, node,
+                            "raw jax key material fed to numpy RNG: route "
+                            "through quilt.rng_from_key (canonical uint32 "
+                            "entropy extraction)",
+                        ), node
+
+    def _assigned_names(self, stmt: ast.stmt) -> Set[str]:
+        out: Set[str] = set()
+        targets: List[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+        return out
+
+    def _check_reuse(self, info: FileInfo, body: List[ast.stmt]):
+        consumed: Dict[str, ast.AST] = {}
+        for stmt in body:
+            # nested blocks restart the analysis (loop bodies re-derive
+            # keys per iteration; branches are alternatives, not sequences)
+            for sub in ast.iter_child_nodes(stmt):
+                if isinstance(sub, list):
+                    continue
+            draws: List[Tuple[str, ast.Call]] = []
+            for node in ast.walk(stmt):
+                if (
+                    isinstance(node, ast.Call)
+                    and _last(node.func) in _KEY_CONSUMERS
+                    and _root_name(node.func)
+                    in ("jax", "random", "jrandom", "jr")
+                    and node.args
+                    and isinstance(node.args[0], ast.Name)
+                ):
+                    draws.append((node.args[0].id, node))
+            draws.sort(key=lambda kn: (kn[1].lineno, kn[1].col_offset))
+            for key_name, node in draws:
+                prev = consumed.get(key_name)
+                if prev is not None:
+                    yield self.finding(
+                        info, node,
+                        f"key `{key_name}` already consumed by a draw at "
+                        f"line {prev.lineno}: split/fold_in before drawing "
+                        "again (identical streams otherwise)",
+                    ), node
+                consumed[key_name] = node
+            for name in self._assigned_names(stmt):
+                consumed.pop(name, None)
+            for sub_body in (
+                getattr(stmt, "body", None),
+                getattr(stmt, "orelse", None),
+                getattr(stmt, "finalbody", None),
+            ):
+                if sub_body:
+                    yield from self._check_reuse(info, sub_body)
+
+
+class RecompileHazard(Rule):
+    """R3 — fresh jit wrappers per call.
+
+    ``jax.jit(...)`` evaluated inside a loop, or wrapping a lambda inside
+    a plain (uncached) function, builds a NEW jitted callable every pass —
+    every call recompiles, silently costing seconds per sample.  The
+    blessed pattern is the ``_compiled_round`` factory: jit inside an
+    ``@functools.lru_cache`` function keyed by the static configuration.
+    """
+
+    name = "recompile-hazard"
+    description = "jax.jit constructed per call (loops / uncached factories)"
+
+    def _is_jit_call(self, node: ast.Call) -> bool:
+        if _last(node.func) in ("jit", "pjit"):
+            return True
+        return _last(node.func) == "partial" and any(
+            _last(a) in ("jit", "pjit") for a in node.args
+        )
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            cached = _has_cache_decorator(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.While)) and not cached:
+                    for sub in ast.walk(node):
+                        if isinstance(sub, ast.Call) and self._is_jit_call(
+                            sub
+                        ):
+                            yield self.finding(
+                                info, sub,
+                                f"jax.jit constructed inside a loop in "
+                                f"`{fn.name}`: every iteration builds (and "
+                                "compiles) a fresh callable — hoist it or "
+                                "use an lru_cache factory",
+                            ), sub
+            if cached:
+                continue
+            for node in ast.walk(fn):
+                if (
+                    isinstance(node, ast.Call)
+                    and self._is_jit_call(node)
+                    and any(
+                        isinstance(a, ast.Lambda) for a in node.args
+                    )
+                ):
+                    yield self.finding(
+                        info, node,
+                        f"jax.jit(lambda ...) in uncached `{fn.name}`: the "
+                        "wrapper (and its compile cache entry) is rebuilt "
+                        "per call — name the function and cache the jit",
+                    ), node
+
+
+class PackedBitsOverflow(Rule):
+    """R4 — shift/or key packing past the target dtype width.
+
+    The segmented dedup packs (graph, src, dst, arrival) into one int64
+    sort key; ``core/dedup._packed_bits`` budgets
+    ``glog + 2*(node_bits[+1]) + abits <= 63`` (the +1 is the ``valid=``
+    sentinel bit).  This rule checks every ``(a << s1) | (b << s2) | ...``
+    chain with two or more shifted terms: constant shifts are summed
+    against the inferred target width (``astype``/cast in the chain, else
+    the 63-bit signed x64 default); symbolic shifts must appear in a
+    function that consults ``_packed_bits`` (or its ``fits`` flag) — the
+    repo's guard convention.
+    """
+
+    name = "packed-bits-overflow"
+    description = "bit packing can exceed target dtype (node_bits+1 budget)"
+
+    def _flatten_or(self, node: ast.BinOp) -> List[ast.expr]:
+        terms: List[ast.expr] = []
+        stack: List[ast.expr] = [node]
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, ast.BinOp) and isinstance(cur.op, ast.BitOr):
+                stack.extend([cur.left, cur.right])
+            else:
+                terms.append(cur)
+        return terms
+
+    def _shift_terms(self, terms: List[ast.expr]):
+        return [
+            t for t in terms
+            if isinstance(t, ast.BinOp) and isinstance(t.op, ast.LShift)
+        ]
+
+    def _chain_width(self, chain: ast.AST) -> int:
+        """Target width inferred from casts inside the chain; 63 (signed
+        int64, the call_x64 packing convention) when unannotated."""
+        for node in ast.walk(chain):
+            name = None
+            if isinstance(node, ast.Call):
+                if _last(node.func) == "astype" and node.args:
+                    name = _last(node.args[0])
+                elif _last(node.func) in _INT_WIDTHS:
+                    name = _last(node.func)
+            if name in _INT_WIDTHS:
+                return _INT_WIDTHS[name]
+        return 63
+
+    def _payload_bound(self, node: ast.expr) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return max(node.value.bit_length(), 1)
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitAnd):
+            for side in (node.left, node.right):
+                if isinstance(side, ast.Constant) and isinstance(
+                    side.value, int
+                ):
+                    return max(side.value.bit_length(), 1)
+        return None
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            guarded = any(
+                isinstance(n, ast.Name) and n.id in ("_packed_bits", "fits")
+                for n in ast.walk(fn)
+            )
+            seen: Set[int] = set()
+            for node in ast.walk(fn):
+                if not (
+                    isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.BitOr)
+                ) or id(node) in seen:
+                    continue
+                terms = self._flatten_or(node)
+                for t in terms:
+                    for sub in ast.walk(t):
+                        seen.add(id(sub))
+                shifts = self._shift_terms(terms)
+                if len(shifts) < 2:
+                    continue
+                amounts = [s.right for s in shifts]
+                if all(
+                    isinstance(a, ast.Constant) and isinstance(a.value, int)
+                    for a in amounts
+                ):
+                    width = self._chain_width(node)
+                    top = max(
+                        shifts, key=lambda s: s.right.value  # type: ignore
+                    )
+                    payload = self._payload_bound(top.left) or 1
+                    if top.right.value + payload > width:  # type: ignore
+                        yield self.finding(
+                            info, node,
+                            f"packed key needs >= {top.right.value + payload}"
+                            f" bits but the target dtype holds {width}: "
+                            "widen the dtype or re-budget the fields "
+                            "(_packed_bits convention: node ids cost "
+                            "node_bits+1 with a valid= sentinel)",
+                        ), node
+                elif not guarded:
+                    yield self.finding(
+                        info, node,
+                        "symbolic shift packing without a _packed_bits "
+                        "guard: bound the field widths (node_bits+1 per "
+                        "sentinel-remapped id) before packing",
+                    ), node
+
+
+class TracerLeak(Rule):
+    """R5 — tracers escaping the trace.
+
+    Storing a traced value on ``self`` or a global from inside a
+    jit-reachable function leaks a tracer object that outlives the trace:
+    any later use raises ``UnexpectedTracerError`` (or silently holds a
+    stale constant after the first compile).
+    """
+
+    name = "tracer-leak"
+    description = "traced values stored on self/globals inside jitted code"
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            if fn.name not in project.jit_reachable:
+                continue
+            params = _traced_params(fn)
+            globals_declared: Set[str] = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Global):
+                    globals_declared.update(node.names)
+            for node in ast.walk(fn):
+                if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                    continue
+                value = node.value
+                if not _references(value, params):
+                    continue
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    base = t
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    if (
+                        isinstance(base, ast.Attribute)
+                        and isinstance(base.value, ast.Name)
+                        and base.value.id == "self"
+                    ):
+                        yield self.finding(
+                            info, node,
+                            f"traced value stored on `self.{base.attr}` "
+                            f"inside jit-reachable `{fn.name}`: the tracer "
+                            "outlives the trace (UnexpectedTracerError)",
+                        ), node
+                    elif (
+                        isinstance(base, ast.Name)
+                        and base.id in globals_declared
+                    ):
+                        yield self.finding(
+                            info, node,
+                            f"traced value stored in global `{base.id}` "
+                            f"inside jit-reachable `{fn.name}`",
+                        ), node
+
+
+class DeprecatedShim(Rule):
+    """R6 — src/ calling its own deprecation shims.
+
+    Functions that call ``_warn_shim`` are the deprecated free-function
+    surface kept for external callers; internal code invoking them takes
+    the DeprecationWarning AND the per-call plan-cache digest cost the
+    session API exists to avoid.
+    """
+
+    name = "deprecated-shim"
+    description = "internal call to a _warn_shim-wrapped deprecated function"
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        if not project.shim_names:
+            return
+        for fn in _functions(info.tree):
+            if fn.name in project.shim_names:
+                continue  # shims may delegate among themselves
+            for node in ast.walk(fn):
+                if (
+                    isinstance(node, ast.Call)
+                    and _last(node.func) in project.shim_names
+                ):
+                    yield self.finding(
+                        info, node,
+                        f"call to deprecated shim `{_last(node.func)}` "
+                        "inside src/: use the session API "
+                        "(repro.api.MAGMSampler / KPGMSampler)",
+                    ), node
+
+
+class MissingValidMask(Rule):
+    """R7 — sentinel producers feeding the dedup without ``valid=``.
+
+    ``segmented_unique_mask`` packs src/dst into the sort key; -1
+    sentinel rows (lookup misses) MUST be remapped through the ``valid=``
+    mask (which re-budgets node_bits+1 and excludes them from ranking) —
+    packed raw, -1 aliases a real edge key and both the dedup and the
+    per-graph counts corrupt silently.
+    """
+
+    name = "missing-valid-mask"
+    description = "-1 sentinels reach segmented_unique_mask without valid="
+
+    def _produces_sentinel(self, fn: ast.FunctionDef, names: Set[str]):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                targets = {
+                    t.id for t in node.targets if isinstance(t, ast.Name)
+                }
+                if not (targets & names):
+                    continue
+                for sub in ast.walk(node.value):
+                    if (
+                        isinstance(sub, ast.Constant)
+                        and sub.value == -1
+                    ) or (
+                        isinstance(sub, ast.UnaryOp)
+                        and isinstance(sub.op, ast.USub)
+                        and isinstance(sub.operand, ast.Constant)
+                        and sub.operand.value == 1
+                    ):
+                        return True
+        return False
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for fn in _functions(info.tree):
+            for node in ast.walk(fn):
+                if not (
+                    isinstance(node, ast.Call)
+                    and _last(node.func) == "segmented_unique_mask"
+                ):
+                    continue
+                if any(k.arg == "valid" for k in node.keywords):
+                    continue
+                pair_names = {
+                    a.id
+                    for a in node.args[1:3]
+                    if isinstance(a, ast.Name)
+                }
+                if pair_names and self._produces_sentinel(fn, pair_names):
+                    yield self.finding(
+                        info, node,
+                        "src/dst carry -1 sentinels but "
+                        "segmented_unique_mask is called without valid=: "
+                        "misses will alias real packed keys",
+                    ), node
+
+
+class UnlockedSharedMutation(Rule):
+    """R8 — worker-class shared state mutated outside the lock.
+
+    In a class that owns both a ``threading.Lock`` and a worker
+    ``threading.Thread`` (the GraphServer shape), every ``self.*``
+    mutation outside ``__init__`` races the worker unless it holds the
+    lock — including the close() flag and the stats counters.
+    """
+
+    name = "unlocked-shared-mutation"
+    description = "self.* mutated outside `with self._lock` in worker classes"
+
+    def _lock_names(self, cls: ast.ClassDef) -> Tuple[Set[str], bool]:
+        locks: Set[str] = set()
+        has_thread = False
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign) and isinstance(
+                node.value, ast.Call
+            ):
+                callee = _last(node.value.func)
+                for t in node.targets:
+                    if (
+                        isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                    ):
+                        if callee in ("Lock", "RLock"):
+                            locks.add(t.attr)
+                        if callee == "Thread":
+                            has_thread = True
+        return locks, has_thread
+
+    def _is_lock_with(self, node: ast.With, locks: Set[str]) -> bool:
+        for item in node.items:
+            ctx = item.context_expr
+            if (
+                isinstance(ctx, ast.Attribute)
+                and isinstance(ctx.value, ast.Name)
+                and ctx.value.id == "self"
+                and ctx.attr in locks
+            ):
+                return True
+        return False
+
+    def _walk_method(
+        self, info, method: str, body, locks: Set[str], locked: bool
+    ):
+        for stmt in body:
+            if isinstance(stmt, ast.With):
+                inner = locked or self._is_lock_with(stmt, locks)
+                yield from self._walk_method(
+                    info, method, stmt.body, locks, inner
+                )
+                continue
+            if not locked and isinstance(stmt, (ast.Assign, ast.AugAssign)):
+                targets = (
+                    stmt.targets
+                    if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                for t in targets:
+                    base = t
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    if (
+                        isinstance(base, ast.Attribute)
+                        and isinstance(base.value, ast.Name)
+                        and base.value.id == "self"
+                        and base.attr not in locks
+                    ):
+                        yield self.finding(
+                            info, stmt,
+                            f"`self.{base.attr}` mutated in `{method}` "
+                            "without holding the lock: races the worker "
+                            "thread (wrap in `with self._lock:`)",
+                        ), stmt
+            for sub_body in (
+                getattr(stmt, "body", None),
+                getattr(stmt, "orelse", None),
+                getattr(stmt, "finalbody", None),
+            ):
+                if sub_body:
+                    yield from self._walk_method(
+                        info, method, sub_body, locks, locked
+                    )
+            for handler in getattr(stmt, "handlers", ()):
+                yield from self._walk_method(
+                    info, method, handler.body, locks, locked
+                )
+
+    def check(self, info: FileInfo, project: ProjectContext):
+        for cls in ast.walk(info.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks, has_thread = self._lock_names(cls)
+            if not locks or not has_thread:
+                continue
+            for fn in cls.body:
+                if not isinstance(
+                    fn, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    continue
+                if fn.name in ("__init__", "__del__"):
+                    continue
+                yield from self._walk_method(
+                    info, fn.name, fn.body, locks, locked=False
+                )
+
+
+ALL_RULES = [
+    HostSyncInJit(),
+    PrngKeyDiscipline(),
+    RecompileHazard(),
+    PackedBitsOverflow(),
+    TracerLeak(),
+    DeprecatedShim(),
+    MissingValidMask(),
+    UnlockedSharedMutation(),
+]

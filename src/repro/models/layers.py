@@ -321,7 +321,8 @@ def _capacity(tokens_per_row: int, cfg: ModelConfig) -> int:
         # decode parity), padded to the 8-sublane boundary — padding to 128
         # would inflate expert FLOPs 64x for single-token steps
         return max(((full + 7) // 8) * 8, cfg.experts_per_token)
-    c = int(full * cfg.capacity_factor / cfg.num_experts)
+    # cfg is a static ModelConfig; trace-time Python arithmetic only
+    c = int(full * cfg.capacity_factor / cfg.num_experts)  # lint: disable=host-sync-in-jit
     if c >= 128:
         return ((c + 127) // 128) * 128
     return max(((c + 7) // 8) * 8, cfg.experts_per_token)

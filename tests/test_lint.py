@@ -1,0 +1,726 @@
+"""repro.lint: per-rule true-positive/true-negative fixtures + engine
+contracts (pragmas, exit codes, JSON schema, call-graph reachability).
+
+Every rule gets at least one snippet it MUST flag and one adjacent
+snippet it MUST NOT flag — the negatives encode the repo idioms the
+rules are calibrated against (lru_cache jit factories, static kwonly
+params, the ``key=None`` default, the ``_packed_bits`` guard, ...).
+"""
+
+import json
+import textwrap
+
+import pytest
+
+from repro.lint import ALL_RULES, lint_source
+from repro.lint.__main__ import main as lint_main
+from repro.lint.callgraph import jit_reachable_names
+from repro.lint.engine import parse_file_info, render_human, render_json
+
+
+def _rules(src):
+    return [f.rule for f in lint_source(textwrap.dedent(src))]
+
+
+def _lines(src, rule):
+    return [
+        f.line
+        for f in lint_source(textwrap.dedent(src))
+        if f.rule == rule
+    ]
+
+
+# ---------------------------------------------------------------------------
+# R1 host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+
+def test_host_sync_positive_int_cast():
+    src = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return int(x) + 1
+    """
+    assert "host-sync-in-jit" in _rules(src)
+
+
+def test_host_sync_positive_numpy_and_item():
+    src = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        y = np.asarray(x)
+        return y.item()
+    """
+    assert _rules(src).count("host-sync-in-jit") == 2
+
+
+def test_host_sync_positive_transitive_callee():
+    # f is the jit root; g is only reachable THROUGH f's call graph
+    src = """
+    import jax
+    import numpy as np
+
+    def g(x):
+        return np.sum(x)
+
+    @jax.jit
+    def f(x):
+        return g(x)
+    """
+    assert "host-sync-in-jit" in _rules(src)
+
+
+def test_host_sync_negative_unjitted():
+    src = """
+    import numpy as np
+
+    def f(x):
+        return int(np.sum(x))
+    """
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+def test_host_sync_negative_static_shape_access():
+    src = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        pad = int(np.ceil(x.shape[0] / 8)) * 8
+        return pad
+    """
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+def test_host_sync_negative_static_kwonly_param():
+    # kwonly params are plan configuration bound via functools.partial
+    # before jit — Python scalars, never tracers
+    src = """
+    import jax
+    import math
+
+    @jax.jit
+    def f(x, *, num_blocks):
+        return x * math.log(float(num_blocks))
+    """
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+def test_host_sync_negative_scalar_annotation_and_static_argnames():
+    src = """
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("mesh",))
+    def f(x, mesh, n: int):
+        k = int(n - 1)
+        dev = len(mesh.devices)
+        return x + k + dev
+    """
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R2 prng-key-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_prng_positive_key_reuse():
+    src = """
+    import jax
+
+    def f(key, shape):
+        a = jax.random.uniform(key, shape)
+        b = jax.random.normal(key, shape)
+        return a + b
+    """
+    assert "prng-key-discipline" in _rules(src)
+
+
+def test_prng_negative_split_between_draws():
+    src = """
+    import jax
+
+    def f(key, shape):
+        k1, k2 = jax.random.split(key)
+        a = jax.random.uniform(k1, shape)
+        b = jax.random.normal(k2, shape)
+        key, sub = jax.random.split(key)
+        c = jax.random.uniform(key, shape)
+        return a + b + c
+    """
+    assert "prng-key-discipline" not in _rules(src)
+
+
+def test_prng_negative_reassigned_key():
+    src = """
+    import jax
+
+    def f(key, shape):
+        a = jax.random.uniform(key, shape)
+        key = jax.random.fold_in(key, 1)
+        b = jax.random.uniform(key, shape)
+        return a + b
+    """
+    assert "prng-key-discipline" not in _rules(src)
+
+
+def test_prng_positive_hardcoded_seed():
+    src = """
+    import jax
+
+    def f(shape):
+        key = jax.random.PRNGKey(42)
+        return jax.random.uniform(key, shape)
+    """
+    assert "prng-key-discipline" in _rules(src)
+
+
+def test_prng_negative_none_default_idiom():
+    # the documented caller-overridable default is NOT a buried seed
+    src = """
+    import jax
+
+    def f(shape, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.random.uniform(key, shape)
+
+    def g(shape, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return jax.random.uniform(key, shape)
+    """
+    assert "prng-key-discipline" not in _rules(src)
+
+
+def test_prng_positive_raw_key_to_numpy():
+    src = """
+    import numpy as np
+
+    def f(key):
+        return np.random.default_rng(int(key[0]))
+    """
+    assert "prng-key-discipline" in _rules(src)
+
+
+def test_prng_negative_rng_from_key_and_plain_seed():
+    src = """
+    import numpy as np
+
+    def rng_from_key(key):
+        words = np.asarray(key, dtype=np.uint32)
+        return np.random.default_rng(words.tolist())
+
+    def g(seed):
+        return np.random.default_rng(seed)
+    """
+    assert "prng-key-discipline" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R3 recompile-hazard
+# ---------------------------------------------------------------------------
+
+
+def test_recompile_positive_jit_in_loop():
+    src = """
+    import jax
+
+    def f(xs):
+        out = []
+        for x in xs:
+            out.append(jax.jit(step)(x))
+        return out
+
+    def step(x):
+        return x + 1
+    """
+    assert "recompile-hazard" in _rules(src)
+
+
+def test_recompile_positive_jit_lambda_uncached():
+    src = """
+    import jax
+
+    def make(scale):
+        return jax.jit(lambda x: x * scale)
+    """
+    assert "recompile-hazard" in _rules(src)
+
+
+def test_recompile_negative_lru_cache_factory():
+    # the _compiled_round idiom: jit inside a cache keyed by static config
+    src = """
+    import functools
+    import jax
+
+    @functools.lru_cache(maxsize=64)
+    def compiled(rounds):
+        return jax.jit(lambda x: x * rounds)
+
+    def f(xs, rounds):
+        fn = compiled(rounds)
+        out = []
+        for x in xs:
+            out.append(fn(x))
+        return out
+    """
+    assert "recompile-hazard" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R4 packed-bits-overflow
+# ---------------------------------------------------------------------------
+
+
+def test_packed_bits_positive_constant_overflow():
+    src = """
+    import jax.numpy as jnp
+
+    def pack(g, s, d):
+        return ((g & 0xFF) << 60) | (s << 30) | d
+    """
+    assert "packed-bits-overflow" in _rules(src)
+
+
+def test_packed_bits_negative_constant_fits():
+    src = """
+    import jax.numpy as jnp
+
+    def pack(g, s, d):
+        return ((g & 0x3) << 50) | (s << 25) | d
+    """
+    assert "packed-bits-overflow" not in _rules(src)
+
+
+def test_packed_bits_positive_symbolic_unguarded():
+    src = """
+    def pack(g, s, d, node_bits, abits):
+        return (g << (2 * node_bits + abits)) | (s << abits) | d
+    """
+    assert "packed-bits-overflow" in _rules(src)
+
+
+def test_packed_bits_negative_symbolic_with_guard():
+    # the segmented_unique_mask convention: _packed_bits budgets the
+    # fields (node_bits+1 per sentinel-remapped id) before packing
+    src = """
+    def pack(g, s, d, node_bits, abits, num_graphs, n):
+        glog, abits, fits = _packed_bits(node_bits, num_graphs, n)
+        if not fits:
+            return None
+        return (g << (2 * node_bits + abits)) | (s << abits) | d
+    """
+    assert "packed-bits-overflow" not in _rules(src)
+
+
+def test_packed_bits_negative_single_shift():
+    src = """
+    def index(kb, scfg, d):
+        return (kb << d) | scfg
+    """
+    assert "packed-bits-overflow" not in _rules(src)
+
+
+def test_packed_bits_respects_wider_dtype():
+    src = """
+    import jax.numpy as jnp
+
+    def pack(g, s, d):
+        return (g.astype(jnp.uint64) << 60) | (s << 30) | d
+    """
+    assert "packed-bits-overflow" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R5 tracer-leak
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_leak_positive_self_store():
+    src = """
+    import functools
+    import jax
+
+    class M:
+        @functools.partial(jax.jit, static_argnums=0)
+        def f(self, x):
+            self.cache = x * 2
+            return self.cache
+    """
+    assert "tracer-leak" in _rules(src)
+
+
+def test_tracer_leak_positive_global_store():
+    src = """
+    import jax
+
+    _LAST = None
+
+    @jax.jit
+    def f(x):
+        global _LAST
+        _LAST = x
+        return x
+    """
+    assert "tracer-leak" in _rules(src)
+
+
+def test_tracer_leak_negative_unjitted_and_local():
+    src = """
+    import jax
+
+    class M:
+        def f(self, x):
+            self.cache = x * 2
+            return self.cache
+
+    @jax.jit
+    def g(x):
+        y = x * 2
+        return y
+    """
+    assert "tracer-leak" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R6 deprecated-shim
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_shim_positive_internal_call():
+    src = """
+    def _warn_shim(name, alt):
+        pass
+
+    def old_api(x):
+        _warn_shim("old_api", "Sampler")
+        return x + 1
+
+    def internal(x):
+        return old_api(x)
+    """
+    assert "deprecated-shim" in _rules(src)
+
+
+def test_deprecated_shim_negative_shim_delegation():
+    src = """
+    def _warn_shim(name, alt):
+        pass
+
+    def old_api(x):
+        _warn_shim("old_api", "Sampler")
+        return x + 1
+
+    def old_api_fast(x):
+        _warn_shim("old_api_fast", "Sampler")
+        return old_api(x)
+
+    def modern(x):
+        return x + 1
+    """
+    assert "deprecated-shim" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R7 missing-valid-mask
+# ---------------------------------------------------------------------------
+
+
+def test_missing_valid_positive():
+    src = """
+    import jax.numpy as jnp
+
+    def f(gid, src, dst, cum, targets, ok):
+        src = jnp.where(ok, src, -1)
+        dst = jnp.where(ok, dst, -1)
+        return segmented_unique_mask(
+            gid, src, dst, cum, targets, node_bits=8
+        )
+    """
+    assert "missing-valid-mask" in _rules(src)
+
+
+def test_missing_valid_negative_with_mask():
+    src = """
+    import jax.numpy as jnp
+
+    def f(gid, src, dst, cum, targets, ok):
+        src = jnp.where(ok, src, -1)
+        dst = jnp.where(ok, dst, -1)
+        valid = (src >= 0) & (dst >= 0)
+        return segmented_unique_mask(
+            gid, src, dst, cum, targets, node_bits=8, valid=valid
+        )
+    """
+    assert "missing-valid-mask" not in _rules(src)
+
+
+def test_missing_valid_negative_no_sentinels():
+    src = """
+    def f(gid, src, dst, cum, targets):
+        return segmented_unique_mask(
+            gid, src, dst, cum, targets, node_bits=8
+        )
+    """
+    assert "missing-valid-mask" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# R8 unlocked-shared-mutation
+# ---------------------------------------------------------------------------
+
+_SERVER_PREAMBLE = """
+import threading
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._closed = False
+        self.stats = {"served": 0}
+        self._worker = threading.Thread(target=self._drain)
+"""
+
+
+def test_unlocked_mutation_positive():
+    src = _SERVER_PREAMBLE + """
+    def close(self):
+        self._closed = True
+"""
+    assert "unlocked-shared-mutation" in _rules(src)
+
+
+def test_unlocked_mutation_negative_under_lock():
+    src = _SERVER_PREAMBLE + """
+    def close(self):
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+
+    def _bump(self, by):
+        with self._lock:
+            self.stats["served"] += by
+"""
+    assert "unlocked-shared-mutation" not in _rules(src)
+
+
+def test_unlocked_mutation_negative_threadless_class():
+    src = """
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def set(self, n):
+            self.n = n
+    """
+    assert "unlocked-shared-mutation" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# engine: pragmas, suppression spans
+# ---------------------------------------------------------------------------
+
+_POSITIVE = """
+import jax
+
+@jax.jit
+def f(x):
+    return int(x) + 1
+"""
+
+
+def test_pragma_line_suppression():
+    src = _POSITIVE.replace(
+        "return int(x) + 1",
+        "return int(x) + 1  # lint: disable=host-sync-in-jit",
+    )
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+def test_pragma_file_suppression():
+    src = "# lint: disable-file=host-sync-in-jit\n" + _POSITIVE
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+def test_pragma_other_rule_does_not_suppress():
+    src = _POSITIVE.replace(
+        "return int(x) + 1",
+        "return int(x) + 1  # lint: disable=tracer-leak",
+    )
+    assert "host-sync-in-jit" in _rules(src)
+
+
+def test_pragma_multi_rule_and_all():
+    src = _POSITIVE.replace(
+        "return int(x) + 1",
+        "return int(x) + 1  # lint: disable=tracer-leak,host-sync-in-jit",
+    )
+    assert "host-sync-in-jit" not in _rules(src)
+    src_all = _POSITIVE.replace(
+        "return int(x) + 1", "return int(x) + 1  # lint: disable=all"
+    )
+    assert _rules(src_all) == [] or "host-sync-in-jit" not in _rules(src_all)
+
+
+def test_pragma_on_any_spanned_line():
+    # a multi-line flagged call is suppressible from its closing line too
+    src = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        return np.asarray(
+            x
+        )  # lint: disable=host-sync-in-jit
+    """
+    assert "host-sync-in-jit" not in _rules(src)
+
+
+# ---------------------------------------------------------------------------
+# callgraph
+# ---------------------------------------------------------------------------
+
+
+def test_callgraph_partial_alias_roots():
+    # the _compiled_round factory shape: jit applied to a shard_map of a
+    # partial of the real body — the body must still count as a jit root
+    import ast
+
+    src = textwrap.dedent(
+        """
+        import functools
+        import jax
+
+        def _round_body(x, *, rounds):
+            return x + rounds
+
+        def _compiled(rounds):
+            body = functools.partial(_round_body, rounds=rounds)
+            body = _shard_map(body, mesh=None)
+            return jax.jit(body)
+
+        def untouched(x):
+            return x
+        """
+    )
+    reach = jit_reachable_names([ast.parse(src)])
+    assert "_round_body" in reach
+    assert "untouched" not in reach
+
+
+def test_callgraph_transitive_closure():
+    import ast
+
+    src = textwrap.dedent(
+        """
+        import jax
+
+        def helper(x):
+            return inner(x)
+
+        def inner(x):
+            return x * 2
+
+        @jax.jit
+        def root(x):
+            return helper(x)
+        """
+    )
+    reach = jit_reachable_names([ast.parse(src)])
+    assert {"root", "helper", "inner"} <= reach
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, JSON, rule selection
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def dirty_file(tmp_path):
+    p = tmp_path / "dirty.py"
+    p.write_text(_POSITIVE)
+    return str(p)
+
+
+@pytest.fixture()
+def clean_file(tmp_path):
+    p = tmp_path / "clean.py"
+    p.write_text("import jax\n\n\ndef f(x):\n    return x\n")
+    return str(p)
+
+
+def test_cli_exit_codes(dirty_file, clean_file, tmp_path, capsys):
+    assert lint_main([clean_file]) == 0
+    assert lint_main([dirty_file]) == 1
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n")
+    assert lint_main([str(bad)]) == 2
+    assert lint_main([]) == 2
+    assert lint_main(["--rules", "no-such-rule", clean_file]) == 2
+    capsys.readouterr()
+
+
+def test_cli_json_schema(dirty_file, capsys):
+    assert lint_main(["--json", dirty_file]) == 1
+    out = json.loads(capsys.readouterr().out)
+    assert out["version"] == 1
+    assert out["count"] == len(out["findings"]) == 1
+    f = out["findings"][0]
+    assert f["rule"] == "host-sync-in-jit"
+    assert f["path"] == dirty_file
+    assert f["line"] == 6 and f["col"] >= 1
+    assert "int()" in f["message"]
+
+
+def test_cli_rule_selection(dirty_file, capsys):
+    # only a non-matching rule enabled -> clean exit
+    assert lint_main(["--rules", "tracer-leak", dirty_file]) == 0
+    assert lint_main(["--rules", "host-sync-in-jit", dirty_file]) == 1
+    assert lint_main(["--list-rules"]) == 0
+    listed = capsys.readouterr().out
+    for rule in ALL_RULES:
+        assert rule.name in listed
+
+
+def test_render_human_format():
+    findings = lint_source(_POSITIVE, path="x.py")
+    text = render_human(findings)
+    assert "x.py:6:12: host-sync-in-jit:" in text
+    assert "1 finding(s)" in text
+    assert render_human([]) == "clean: 0 findings"
+    parsed = json.loads(render_json([]))
+    assert parsed == {"version": 1, "findings": [], "count": 0}
+
+
+def test_rule_catalog_unique_and_described():
+    names = [r.name for r in ALL_RULES]
+    assert len(names) == len(set(names)) == 8
+    assert all(r.description for r in ALL_RULES)
+
+
+def test_src_tree_is_clean():
+    """The shipped tree must lint clean — the CI contract."""
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    assert lint_main([root]) == 0
+
+
+def test_parse_file_info_tracks_pragmas():
+    info = parse_file_info(
+        "p.py",
+        "# lint: disable-file=tracer-leak\nx = 1  # lint: disable=a, b\n",
+    )
+    assert info.file_pragmas == {"tracer-leak"}
+    assert info.line_pragmas[2] == {"a", "b"}

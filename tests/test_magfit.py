@@ -7,9 +7,13 @@ The recovery statistics live in the ``slow_stats`` tier (n = 2^10..2^12
 fits, bootstrap CIs, compare_backends resampling); everything else is
 tier-1 fast.  Recovery tests draw the OBSERVED graph from the exact
 per-pair Bernoulli reference (recover.exact_edges) so coverage statements
-about the fitter are not contaminated by the production backends' small
-high-Q collision deficit; the resampling comparisons then run both sides
-through the same machinery, which cancels any shared distortion.
+about the fitter stand on ground truth independent of any sampler engine.
+(The high-Q collision deficit this guarded against is gone — the
+exact-cell acceptance mode makes backend per-cell inclusion exactly
+Bernoulli(p), pinned by test_validation.py::test_per_cell_block_z — but
+the independent reference remains the right observed-graph source); the
+resampling comparisons then run both sides through the same machinery,
+which cancels any shared distortion.
 """
 
 import os

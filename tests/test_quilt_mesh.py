@@ -133,7 +133,8 @@ def test_topup_round_stays_on_device():
     for k in quilt.DISPATCH_COUNTERS:
         quilt.DISPATCH_COUNTERS[k] = 0
     edges = quilt.quilt_sample(
-        jax.random.PRNGKey(5), params, F, max_rounds=max_rounds
+        jax.random.PRNGKey(5), params, F, max_rounds=max_rounds,
+        exact_cells=False,
     )
     c = quilt.DISPATCH_COUNTERS
     assert c["host_topup_rounds"] == 0, c
@@ -174,21 +175,26 @@ def test_topup_budget_guard_falls_back_to_host(monkeypatch):
     F = np.asarray(
         magm.sample_attributes(jax.random.PRNGKey(1), 16, params.mu)
     )
-    e_full = quilt.quilt_sample(jax.random.PRNGKey(5), params, F)
+    e_full = quilt.quilt_sample(
+        jax.random.PRNGKey(5), params, F, exact_cells=False
+    )
     # budget admits round 0 (G * ask0) but nothing more: top-ups go host-side
     plan = quilt.get_quilt_plan(F, params.thetas)
     cap = plan.num_graphs * 128
     monkeypatch.setattr(kpgm, "DEVICE_MAX_CANDIDATES", cap)
     for k in quilt.DISPATCH_COUNTERS:
         quilt.DISPATCH_COUNTERS[k] = 0
-    e_capped = quilt.quilt_sample(jax.random.PRNGKey(5), params, F)
+    e_capped = quilt.quilt_sample(
+        jax.random.PRNGKey(5), params, F, exact_cells=False
+    )
     c = quilt.DISPATCH_COUNTERS
     assert c["host_topup_rounds"] >= 1, c
     flat = e_capped[:, 0] * 16 + e_capped[:, 1]
     assert np.unique(flat).size == flat.size
     # capped mesh run must equal the capped no-mesh run exactly
     e_capped_mesh = quilt.quilt_sample(
-        jax.random.PRNGKey(5), params, F, mesh=mesh_mod.make_sampler_mesh()
+        jax.random.PRNGKey(5), params, F, mesh=mesh_mod.make_sampler_mesh(),
+        exact_cells=False,
     )
     np.testing.assert_array_equal(e_capped, e_capped_mesh)
     # and the un-capped result is a superset scale sanity check

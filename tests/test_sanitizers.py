@@ -1,0 +1,254 @@
+"""Runtime sanitizers for the device-resident hot path.
+
+Two instrumented harnesses backing the static linter (repro.lint):
+
+- **transfer guard** — warm sessions of all three backends sample under
+  ``jax.transfer_guard("disallow")``: any implicit host->device transfer
+  inside the hot path (a Python scalar silently promoted per call, an
+  un-pinned numpy operand) fails loudly here instead of costing a sync
+  per sample in production.
+- **recompile budget** — warm ``MAGMSampler.sample()`` /
+  ``sample_stream()`` must trigger ZERO new XLA compilations for a fresh
+  key: the exact-cell engine's round shape is plan-constant, so the
+  ``_compiled_round`` cache must fully absorb every warm call.  Counted
+  via a logging handler on jax's compile log (no private APIs beyond the
+  logger name).
+
+Plus the exact-cell acceptance sanity: exact mode agrees with the legacy
+drawn-target law on mean edge counts at fast scale, and the balldrop
+by-config lookup is bit-identical to the dense inverse.
+"""
+
+import contextlib
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import MAGMSampler, SamplerConfig
+from repro.core import balldrop, magm, quilt
+
+THETA = np.array([[0.35, 0.52], [0.52, 0.95]], dtype=np.float32)
+N, D = 128, 7
+
+BACKEND_CONFIGS = {
+    "quilt": dict(backend="auto"),
+    "split": dict(backend="auto", split=True),
+    "balldrop": dict(backend="balldrop"),
+}
+
+
+def _make_sampler(**kw):
+    params = magm.make_params(THETA, 0.5, D)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(3), N, params.mu)
+    )
+    return MAGMSampler(SamplerConfig(params=params, F=F, **kw))
+
+
+class _CompileCounter(logging.Handler):
+    """Counts 'Finished XLA compilation' records from jax's compile log."""
+
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.count = 0
+        self.names = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        if "Finished XLA compilation" in msg:
+            self.count += 1
+            self.names.append(msg)
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Yield a counter of XLA compilations inside the block."""
+    logger = logging.getLogger("jax._src.dispatch")
+    handler = _CompileCounter()
+    old_propagate = logger.propagate
+    logger.addHandler(handler)
+    logger.propagate = False  # keep the WARNING records off the console
+    try:
+        with jax.log_compiles(True):
+            yield handler
+    finally:
+        logger.removeHandler(handler)
+        logger.propagate = old_propagate
+
+
+@pytest.fixture(params=sorted(BACKEND_CONFIGS))
+def warm_sampler(request):
+    """A sampler of each backend, warmed on two distinct keys."""
+    sampler = _make_sampler(**BACKEND_CONFIGS[request.param])
+    sampler.sample(jax.random.PRNGKey(0))
+    sampler.sample(jax.random.PRNGKey(1))
+    return sampler
+
+
+# ---------------------------------------------------------------------------
+# transfer guard
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_guard_warm_sample(warm_sampler):
+    # key built OUTSIDE the guard: the guard polices the hot path, not
+    # the test's own setup
+    key = jax.random.PRNGKey(2)
+    with jax.transfer_guard("disallow"):
+        gs = warm_sampler.sample(key)
+    assert gs.edges.shape[1] == 2
+    assert gs.edges.shape[0] > 0
+
+
+def test_transfer_guard_warm_stream(warm_sampler):
+    key = jax.random.PRNGKey(2)
+    ref = warm_sampler.sample(key).edges
+    with jax.transfer_guard("disallow"):
+        chunks = list(warm_sampler.sample_stream(key, chunk_edges=256))
+    np.testing.assert_array_equal(np.concatenate(chunks, axis=0), ref)
+
+
+# ---------------------------------------------------------------------------
+# recompile budget
+# ---------------------------------------------------------------------------
+
+
+def test_zero_recompiles_warm_sample(warm_sampler):
+    key = jax.random.PRNGKey(2)
+    with count_compiles() as c:
+        warm_sampler.sample(key)
+    assert c.count == 0, f"warm sample recompiled: {c.names}"
+
+
+def test_zero_recompiles_warm_stream(warm_sampler):
+    warm_sampler.sample_stream(jax.random.PRNGKey(2))  # warm the stream path
+    list(warm_sampler.sample_stream(jax.random.PRNGKey(2), chunk_edges=256))
+    key = jax.random.PRNGKey(4)
+    with count_compiles() as c:
+        list(warm_sampler.sample_stream(key, chunk_edges=256))
+    assert c.count == 0, f"warm stream recompiled: {c.names}"
+
+
+def test_compile_counter_detects_compiles():
+    """The counter itself must not be vacuous."""
+
+    @jax.jit
+    def probe(x):
+        return x * 3 + 1
+
+    with count_compiles() as c:
+        probe(np.arange(7))
+    assert c.count >= 1
+
+
+# ---------------------------------------------------------------------------
+# exact-cell mode sanity (fast-scale companions of the slow_stats z test)
+# ---------------------------------------------------------------------------
+
+
+def _plan():
+    params = magm.make_params(THETA, 0.5, D)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(3), N, params.mu)
+    )
+    return quilt.get_quilt_plan(F, params.thetas), params, F
+
+
+def _dense_truth(params, F):
+    """Sum of per-pair Bernoulli probabilities (the exact-mode target)."""
+    lam = np.asarray(magm.configs_from_attributes(jax.numpy.asarray(F)))
+    P = np.ones((1, 1))
+    for th in np.asarray(params.thetas, dtype=np.float64):
+        P = np.kron(P, th)
+    return P[np.ix_(lam, lam)].sum()
+
+
+def test_exact_vs_legacy_mean_edges_quilt():
+    plan, params, F = _plan()
+    truth = _dense_truth(params, F)
+    ex = np.array(
+        [
+            quilt.quilt_run(
+                jax.random.PRNGKey(s), plan, exact_cells=True
+            ).edges().shape[0]
+            for s in range(6)
+        ],
+        dtype=np.float64,
+    )
+    lg = np.array(
+        [
+            quilt.quilt_run(
+                jax.random.PRNGKey(s), plan, exact_cells=False
+            ).edges().shape[0]
+            for s in range(6)
+        ],
+        dtype=np.float64,
+    )
+    se = np.sqrt(truth / 6.0)
+    assert abs(ex.mean() - truth) < 4 * se
+    assert abs(ex.mean() - lg.mean()) < 8 * se
+
+
+def test_exact_single_round_no_topup():
+    """Exact mode is one plan-constant dispatch: realized targets equal
+    realized counts (no shortfall loop ran)."""
+    plan, _, _ = _plan()
+    run = quilt.quilt_run(jax.random.PRNGKey(11), plan, max_rounds=1)
+    edges = run.edges()
+    assert edges.shape[0] == int(np.asarray(run.targets).sum())
+    assert np.unique(edges, axis=0).shape[0] == edges.shape[0]
+
+
+def test_exact_fallback_counter_on_explicit_targets():
+    """Explicit targets keep the legacy top-up contract (KPGM sessions)."""
+    plan, _, _ = _plan()
+    gtot = plan.B**2
+    targets = np.full(gtot, 3, dtype=np.int64)
+    before = quilt.DISPATCH_COUNTERS["exact_fallbacks"]
+    run = quilt.quilt_run(jax.random.PRNGKey(1), plan, targets=targets)
+    assert quilt.DISPATCH_COUNTERS["exact_fallbacks"] == before
+    assert int(np.asarray(run.targets).sum()) == 3 * gtot
+
+
+def test_balldrop_byconfig_bit_identical_to_inverse():
+    """The by-config dense lookup must reproduce the dense-inverse path
+    edge for edge (same stable occurrence-rank order)."""
+    plan, _, _ = _plan()
+    assert plan.inv is not None and plan.cfg_offset is not None
+    ref = balldrop.balldrop_run(jax.random.PRNGKey(9), plan)
+    no_inv = plan._replace(inv=None)
+    alt = balldrop.balldrop_run(jax.random.PRNGKey(9), no_inv)
+    np.testing.assert_array_equal(ref.edges(), alt.edges())
+
+
+def test_balldrop_exact_vs_legacy_mean_edges():
+    plan, params, F = _plan()
+    truth = _dense_truth(params, F)
+    ex = np.array(
+        [
+            balldrop.balldrop_run(
+                jax.random.PRNGKey(s), plan, exact_cells=True
+            ).edges().shape[0]
+            for s in range(6)
+        ],
+        dtype=np.float64,
+    )
+    se = np.sqrt(truth / 6.0)
+    assert abs(ex.mean() - truth) < 4 * se
+
+
+def test_exact_cells_config_forwarding():
+    """SamplerConfig.exact_cells=False reaches the engine (legacy law
+    draws per-block targets, so targets vary across blocks of equal
+    size; exact mode pins targets == realized counts)."""
+    s_exact = _make_sampler()
+    s_legacy = _make_sampler(exact_cells=False)
+    g1 = s_exact.sample(jax.random.PRNGKey(5))
+    g2 = s_legacy.sample(jax.random.PRNGKey(5))
+    # both valid graphs over the same node set
+    for g in (g1, g2):
+        assert g.edges.min() >= 0 and g.edges.max() < N
+    with pytest.raises(ValueError):
+        SamplerConfig(params=s_exact.config.params, exact_cells="yes")

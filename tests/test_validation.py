@@ -159,6 +159,28 @@ def test_backend_matches_theory(suite, backend):
     assert not validate.failures(claims), validate.failures(claims)
 
 
+@pytest.mark.parametrize("backend", ("auto", "balldrop"))
+def test_per_cell_block_z(suite, backend):
+    """Per-cell z within +-3 at n=2^12 (the exact-cell acceptance fix).
+
+    The drawn-target law undercounted dense high-Q cells (duplicate
+    proposals collide, the realized distinct count falls short of the
+    Bernoulli target — the deficit the MAGFIT recovery suite surfaced
+    against the exact_edges reference).  Exact-cell mode makes per-cell
+    inclusion exactly Bernoulli(p), so EVERY (rank, rank) block mean must
+    sit within 3 of its closed-form SE — elementwise, not just the
+    aggregate claims of compare_to_theory.  The SE folds the Poisson-scale
+    proxy (mean + 1) next to the binomial block variance, matching the
+    honesty convention of validate._gap_claim at small seed counts.
+    """
+    st = suite["stats"][backend]
+    tm = suite["theory"]
+    k = st.blocks.shape[0]
+    se = np.sqrt((tm.block_std**2 + np.abs(tm.block_mean) + 1.0) / k)
+    z = (st.blocks.mean(axis=0) - tm.block_mean) / se
+    assert float(np.abs(z).max()) <= 3.0, f"per-cell z:\n{z}"
+
+
 def test_isolated_count_scale(suite):
     """Sanity anchor: the realized isolated-node counts sit at the
     predicted O(100) scale, not at 0 or O(n)."""
