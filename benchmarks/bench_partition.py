@@ -8,7 +8,7 @@ import numpy as np
 
 from benchmarks.common import THETA_1, emit, time_call
 from repro.api import MAGMSampler, SamplerConfig
-from repro.core import balldrop, magm, partition
+from repro.core import balldrop, magm, partition, quilt
 
 # timing the full quilt above this d would need multi-GB candidate buffers
 # on a CPU host; larger n keep the (cheap) partition-size study only
@@ -97,6 +97,33 @@ def run(max_d: int = 16) -> None:
                 f"B={plan.B};cost={plan.bd_cost:.1f};"
                 f"lookup_entries={entries}",
             )
+
+    # serving cold-start: build_quilt_plan cold (fresh partition) vs warm
+    # (content-keyed _PART_CACHE hit — what a second session over the same
+    # attribute matrix, or a session re-created after a parameter refit,
+    # actually pays).  reuse_partition=False forces the cold path without
+    # clearing the shim caches out from under anything else.
+    d_plan = 12
+    params = magm.make_params(THETA_1, 0.52, d_plan)
+    F_plan = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(99), 2**d_plan, params.mu)
+    )
+    quilt.build_quilt_plan(F_plan, params.thetas)  # prime jit + _PART_CACHE
+    t_cold = time_call(
+        lambda: quilt.build_quilt_plan(
+            F_plan, params.thetas, reuse_partition=False
+        )
+    )
+    plan = quilt.build_quilt_plan(F_plan, params.thetas)
+    emit(
+        f"plan_build_cold_n{2**d_plan}", t_cold,
+        f"B={plan.B};d={d_plan}",
+    )
+    t_warm = time_call(lambda: quilt.build_quilt_plan(F_plan, params.thetas))
+    emit(
+        f"plan_build_warm_n{2**d_plan}", t_warm,
+        f"B={plan.B};d={d_plan};vs_cold={t_cold / max(t_warm, 1e-9):.2f}x",
+    )
 
     # partition-size study continues past the timed range
     for d in range(min(max_d, QUILT_TIME_MAX_D) + 1, max_d + 1):

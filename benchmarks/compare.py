@@ -49,6 +49,9 @@ MODULE_PREFIXES = (
     ("fig13", "mu"),
     ("fig14", "d"),
     ("kernel", "kernels"),
+    ("kernel_prng", "kernels"),
+    ("split_", "mu"),
+    ("plan_build", "partition"),
     ("balldrop", "partition"),
     ("serve", "serve"),
     ("fit_", "fit"),

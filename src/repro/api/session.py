@@ -258,12 +258,11 @@ class MAGMSampler(_Session):
         )
 
     def _split_sample(self, key: jax.Array):
-        """One Section-5 draw from the owned SplitPlan (rng derived from
-        the same key, so the session keeps the one-key contract)."""
+        """One Section-5 draw from the owned SplitPlan: light quilt + the
+        device-resident heavy round, both keyed from ``key`` alone."""
         return quilt.split_run(
             key,
             self.split_plan,
-            quilt.rng_from_key(key),
             max_rounds=self.config.max_rounds,
             oversample=self.config.oversample,
             backend=self.config.backend,

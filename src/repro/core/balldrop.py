@@ -83,8 +83,9 @@ def _bd_round_body(
     """Per-shard fused ball-dropping round over a chunk of samples.
 
     Mirrors ``quilt._round_body`` with two twists: every candidate carries
-    its own uniform block ranks (kb, lb) ~ U[0, B)^2 (drawn from a sibling
-    fold of the same per-sample key as the descent uniforms), and the
+    its own uniform block ranks (kb, lb) ~ U[0, B)^2 (the two reserved
+    rank channels of the same counter-PRNG stream as the descent
+    uniforms — ``ops.rank_pair``), and the
     segmented dedup runs over NODE pairs with the lookup misses masked out
     via ``valid=`` — a miss is the rejection step, so only accepted balls
     rank against the per-sample target.  Returns (snode, dnode, take,
@@ -106,66 +107,48 @@ def _bd_round_body(
     """
     d = cum.shape[0]
     gc = gids.shape[0]
-    uch, kch = [], []
-    for r, ask in enumerate(rounds):
-        kr = jax.random.fold_in(rkey, r)
-        gkeys = jax.vmap(lambda g, k=kr: jax.random.fold_in(k, g))(gids)
-        uch.append(
-            jax.vmap(
-                lambda k, a=ask: jax.random.uniform(
-                    jax.random.fold_in(k, 0), (a, d), dtype=jnp.float32
-                )
-            )(gkeys)
-        )
-        kch.append(
-            jax.vmap(
-                lambda k, a=ask: jax.random.randint(
-                    jax.random.fold_in(k, 1),
-                    (a, 2),
-                    0,
-                    num_blocks,
-                    dtype=jnp.int32,
-                )
-            )(gkeys)
-        )
-    u = uch[0] if len(uch) == 1 else jnp.concatenate(uch, axis=1)
-    kl = kch[0] if len(kch) == 1 else jnp.concatenate(kch, axis=1)
-    a_tot = u.shape[1]
-    u = u.reshape(gc * a_tot, d)
-    kl = kl.reshape(gc * a_tot, 2)
-    kb, lb = kl[:, 0], kl[:, 1]
-    if use_kernel:
-        table_cfg, table_node = tables
-        scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
-            u, cum, kb, lb, table_cfg, table_node
-        )
-    elif len(tables) == 3:
-        # by-config short-circuit: rank kb names config x's kb-th node
-        # directly (hit iff kb < c_x), no block table at all
-        cfg_offset, cfg_count, cfg_nodes = tables
-        scfg, dcfg = kpgm._descend(u, cum)
-        cs, cd = cfg_count[scfg], cfg_count[dcfg]
-        idx_s = cfg_offset[scfg] + jnp.minimum(kb, jnp.maximum(cs - 1, 0))
-        idx_d = cfg_offset[dcfg] + jnp.minimum(lb, jnp.maximum(cd - 1, 0))
-        snode = jnp.where(kb < cs, cfg_nodes[idx_s], jnp.int32(-1))
-        dnode = jnp.where(lb < cd, cfg_nodes[idx_d], jnp.int32(-1))
-    else:
-        (inv,) = tables
-        scfg, dcfg = kpgm._descend(u, cum)
-        flat = inv.reshape(-1)
-        snode = flat[(kb << d) | scfg]
-        dnode = flat[(lb << d) | dcfg]
-    valid = (snode >= 0) & (dnode >= 0)
+    a_tot = int(sum(rounds))
+    seed = ops.counter_seed(rkey)
     local = (jnp.arange(gc * a_tot, dtype=jnp.int32) // a_tot).astype(
         jnp.int32
     )
+    gid = gids[local]
+    if use_kernel:
+        table_cfg, table_node = tables
+        scfg, dcfg, snode, dnode = ops.quilt_prng_descent_lookup_pallas(
+            seed, gids, cum, table_cfg, table_node,
+            a_tot=a_tot, num_blocks=num_blocks, ranks=True,
+        )
+    else:
+        slot = jnp.arange(gc * a_tot, dtype=jnp.int32) - local * a_tot
+        u = ops.descent_uniforms(seed[0, 0], seed[0, 1], gid, slot, d)
+        kb, lb = ops.rank_pair(
+            seed[0, 0], seed[0, 1], gid, slot, num_blocks
+        )
+        if len(tables) == 3:
+            # by-config short-circuit: rank kb names config x's kb-th node
+            # directly (hit iff kb < c_x), no block table at all
+            cfg_offset, cfg_count, cfg_nodes = tables
+            scfg, dcfg = kpgm._descend(u, cum)
+            cs, cd = cfg_count[scfg], cfg_count[dcfg]
+            idx_s = cfg_offset[scfg] + jnp.minimum(kb, jnp.maximum(cs - 1, 0))
+            idx_d = cfg_offset[dcfg] + jnp.minimum(lb, jnp.maximum(cd - 1, 0))
+            snode = jnp.where(kb < cs, cfg_nodes[idx_s], jnp.int32(-1))
+            dnode = jnp.where(lb < cd, cfg_nodes[idx_d], jnp.int32(-1))
+        else:
+            (inv,) = tables
+            scfg, dcfg = kpgm._descend(u, cum)
+            flat = inv.reshape(-1)
+            snode = flat[(kb << d) | scfg]
+            dnode = flat[(lb << d) | dcfg]
+    valid = (snode >= 0) & (dnode >= 0)
     if exact:
         pair = snode.astype(jnp.int64) * jnp.int64(
             1 << node_bits
         ) + dnode.astype(jnp.int64)
         valid = valid & quilt._exact_cell_valid(
             rkey,
-            gids[local],
+            gid,
             scfg,
             dcfg,
             thetas,

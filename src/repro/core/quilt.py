@@ -28,11 +28,13 @@ across a device mesh:
    node inverse used by the CPU fast path), the cumulative quadrant
    probabilities and the |E| moments, all as device arrays.
 2. **Layout** — every block-pair graph g gets the SAME number of candidate
-   slots per round (dedup.uniform_ask) and its own PRNG key
-   ``fold_in(fold_in(round_key, round), g)``, so graph g's candidate stream
-   depends only on (key, g, round sizes) — never on how graphs are laid out
-   across devices.  This is what makes the sharded and single-device paths
-   bit-identical.
+   slots per round (dedup.uniform_ask) and derives its variates from the
+   counter PRNG (kernels/quadrant_descent.py): slot s's level-k uniform is
+   ``counter_u01(counter_seed(round_key), g, s * PRNG_CHANNELS + k)``, so
+   graph g's candidate stream depends only on (key, g, absolute slot) —
+   never on how graphs are laid out across devices, and never on where the
+   round boundaries fell.  This is what makes the sharded and
+   single-device paths bit-identical and top-up rounds prefix-stable.
 3. **Descent + lookup + dedup** — one fused program per round draws the
    candidates for ALL local block pairs: quadrant descent produces config
    ids, mapped through the per-block lookup tables on-device (Pallas kernel
@@ -77,6 +79,7 @@ from typing import List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.compat import shard_map as _shard_map
 from repro.core import dedup, kpgm, kron, magm, partition
@@ -226,12 +229,31 @@ def _partition_state(F: np.ndarray, d: int):
     return part, tables, inv_np, bycfg_np
 
 
+@jax.jit
+def _plan_constants(th_dev: jax.Array):
+    """All theta-only plan scalars/tables fused into ONE compiled dispatch.
+
+    Returns (cum, m, std, p_max).  Eagerly these were ~a dozen tiny op-by-op
+    dispatches per plan build (cumprobs, two moment reductions, the sqrt,
+    the per-level max-product); serving cold-start builds exactly one plan,
+    so folding them into a single jitted call is the cheap half of the
+    ``plan_build_*`` win — the partition reuse in :func:`build_quilt_plan`
+    is the other.
+    """
+    cum = kpgm._level_cumprobs(th_dev)
+    m, v = kpgm.edge_moments(th_dev)
+    std = jnp.sqrt(jnp.maximum(m - v, 0.0))
+    p_max = jnp.prod(jnp.max(th_dev, axis=(1, 2)))
+    return cum, m, std, p_max
+
+
 def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
     part, tables, inv_np, bycfg_np = part_state
     n, d = F.shape
     th_dev = jnp.asarray(th)
-    cum = kpgm._level_cumprobs(th_dev)
-    m, v = kpgm.edge_moments(th_dev)
+    cum, m_dev, std_dev, pmax_dev = _plan_constants(th_dev)
+    # one transfer for all three host-side scalars, not three blocking gets
+    m, std, p_max = (float(x) for x in jax.device_get((m_dev, std_dev, pmax_dev)))
     bd_mean = bd_std = bd_cost = None
     if part.B and (1 << d) <= kron.MOMENT_CAP:
         c = kron.config_multiplicities(part, d)
@@ -247,12 +269,12 @@ def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
         table_cfg=jnp.asarray(tables.configs) if tables else jnp.zeros((0, 8), jnp.int32),
         table_node=jnp.asarray(tables.nodes) if tables else jnp.zeros((0, 8), jnp.int32),
         inv=jnp.asarray(inv_np) if inv_np is not None else None,
-        mean_edges=float(m),
-        std_edges=float(jnp.sqrt(jnp.maximum(m - v, 0.0))),
+        mean_edges=m,
+        std_edges=std,
         bd_mean=bd_mean,
         bd_std=bd_std,
         bd_cost=bd_cost,
-        p_max=float(np.prod(np.max(np.asarray(th), axis=(1, 2)))),
+        p_max=p_max,
         cfg_offset=jnp.asarray(bycfg_np[0]) if bycfg_np else None,
         cfg_count=jnp.asarray(bycfg_np[1]) if bycfg_np else None,
         cfg_nodes=jnp.asarray(bycfg_np[2]) if bycfg_np else None,
@@ -261,16 +283,37 @@ def _assemble_plan(F: np.ndarray, th: np.ndarray, part_state) -> QuiltPlan:
     return plan
 
 
-def build_quilt_plan(F: np.ndarray, thetas: jax.Array) -> QuiltPlan:
-    """Build a QuiltPlan OUTSIDE the global cache.
+def build_quilt_plan(
+    F: np.ndarray, thetas: jax.Array, *, reuse_partition: bool = True
+) -> QuiltPlan:
+    """Build a QuiltPlan the caller owns (the session cold-start path).
 
-    The session path (``repro.api``): the caller owns the returned plan for
-    its whole lifetime, so no content digest is ever computed and
-    :func:`clear_plan_cache` cannot evict it.
+    The session path (``repro.api``): the caller holds the returned plan for
+    its whole lifetime, so the *plan* itself is never cached and
+    :func:`clear_plan_cache` cannot evict it out from under a live session.
+
+    The theta-independent partition state (Theorem-2 blocks, padded lookup
+    tables, dense/by-config inverses) IS shared through the content-keyed
+    ``_PART_CACHE`` by default: it is immutable once built and dominates the
+    serving cold start, so two sessions over the same attribute matrix — or
+    one session re-created after a parameter refit — pay the O(n + B·2^d)
+    partition cost once.  A cache hit leaves ``PLAN_STATS['partition_builds']``
+    untouched.  Pass ``reuse_partition=False`` to force a fresh build (and
+    skip the SHA-1 content digest entirely, restoring the old contract for
+    callers that mutate F arrays in place).
     """
     F = np.asarray(F)
     th = np.asarray(thetas)
-    return _assemble_plan(F, th, _partition_state(F, F.shape[1]))
+    if not reuse_partition:
+        return _assemble_plan(F, th, _partition_state(F, F.shape[1]))
+    fkey = _digest(F)
+    part_state = _PART_CACHE.get(fkey)
+    if part_state is None:
+        part_state = _partition_state(F, F.shape[1])
+        _cache_put(_PART_CACHE, fkey, part_state)
+    else:
+        _PART_CACHE.move_to_end(fkey)
+    return _assemble_plan(F, th, part_state)
 
 
 def build_kpgm_plan(thetas: jax.Array) -> QuiltPlan:
@@ -506,20 +549,24 @@ def _round_body(
     """Per-shard fused quilting round over a chunk of block-pair graphs.
 
     ``gids``/``targets`` are this shard's GLOBAL graph ids and edge targets
-    (zero-target padding rows emit nothing).  ``rounds`` holds the per-graph
-    slot count of every round so far: candidates for graph g are the
-    concatenation over r of ``uniform(fold_in(fold_in(rkey, r), g),
-    (rounds[r], d))`` — re-descending the earlier rounds is how the top-up
-    carries the seen keys through the segmented dedup with exact
-    arrival-order semantics (one longer iid stream per graph).  Everything
-    depends only on per-graph keys + static sizes, so any sharding of the
-    graph axis yields bit-identical per-graph results.
+    (zero-target padding rows emit nothing).  Candidates come from the
+    counter PRNG (kernels/quadrant_descent.py): graph g's slot-s level-k
+    uniform is ``counter_u01(counter_seed(rkey), g, s * PRNG_CHANNELS + k)``
+    — a pure function of the round key, the GLOBAL graph id and the
+    candidate's absolute position in the graph's concatenated stream.
+    ``rounds`` therefore only sets the total slot count ``sum(rounds)``: a
+    top-up round re-derives the earlier rounds' variates as an exact prefix
+    (that is how the seen keys ride through the segmented dedup with exact
+    arrival-order semantics), and any sharding of the graph axis is
+    bit-identical by construction (no per-device state enters the hash).
 
     Returns fixed-shape (scfg, dcfg, snode, dnode, take, counts); call under
     dedup.call_x64.  ``tables`` is (table_cfg, table_node) for the Pallas
-    kernel path or (inv,) for the jnp dense-gather path (CPU).  No
-    collectives: with shard_map, the caller's gather of the outputs is the
-    only cross-device step.
+    kernel path (which derives the SAME variates in-kernel — no HBM uniforms
+    operand) or (inv,) for the jnp dense-gather path (CPU); the two paths
+    are bit-identical by shared integer math.  No collectives: with
+    shard_map, the caller's gather of the outputs is the only cross-device
+    step.
 
     ``exact=True`` is the exact-cell mode (single round, plan-constant
     budget): instead of ranking first-N-distinct cells against a drawn
@@ -531,38 +578,30 @@ def _round_body(
     """
     d = cum.shape[0]
     gc = gids.shape[0]
-    chunks = []
-    for r, ask in enumerate(rounds):
-        kr = jax.random.fold_in(rkey, r)
-        gkeys = jax.vmap(lambda g, k=kr: jax.random.fold_in(k, g))(gids)
-        chunks.append(
-            jax.vmap(
-                lambda k, a=ask: jax.random.uniform(
-                    k, (a, d), dtype=jnp.float32
-                )
-            )(gkeys)
-        )
-    u = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=1)
-    a_tot = u.shape[1]
-    u = u.reshape(gc * a_tot, d)
+    a_tot = int(sum(rounds))
+    seed = ops.counter_seed(rkey)
     local = (jnp.arange(gc * a_tot, dtype=jnp.int32) // a_tot).astype(
         jnp.int32
     )
     gid = gids[local]
-    # graph ids beyond B^2 are batched samples (repro.api sample_batch):
-    # sample s's block pair g' lives at gid = s * B^2 + g', so the block
-    # decode reduces mod B^2 (a no-op for the single-sample gid < B^2 case)
-    block = gid % (num_blocks * num_blocks)
-    kb = block // num_blocks
-    lb = block % num_blocks
     if use_kernel:
         table_cfg, table_node = tables
-        scfg, dcfg, snode, dnode = ops.quilt_descent_lookup_pallas(
-            u, cum, kb, lb, table_cfg, table_node
+        scfg, dcfg, snode, dnode = ops.quilt_prng_descent_lookup_pallas(
+            seed, gids, cum, table_cfg, table_node,
+            a_tot=a_tot, num_blocks=num_blocks,
         )
     else:
         (inv,) = tables
+        slot = jnp.arange(gc * a_tot, dtype=jnp.int32) - local * a_tot
+        u = ops.descent_uniforms(seed[0, 0], seed[0, 1], gid, slot, d)
         scfg, dcfg = kpgm._descend(u, cum)
+        # graph ids beyond B^2 are batched samples (repro.api
+        # sample_batch): sample s's block pair g' lives at
+        # gid = s * B^2 + g', so the block decode reduces mod B^2 (a no-op
+        # for the single-sample gid < B^2 case)
+        block = gid % (num_blocks * num_blocks)
+        kb = block // num_blocks
+        lb = block % num_blocks
         flat = inv.reshape(-1)
         snode = flat[(kb << d) | scfg]
         dnode = flat[(lb << d) | dcfg]
@@ -1252,6 +1291,17 @@ class SplitPlan(NamedTuple):
     ``split=True``) build this ONCE and amortize it across samples — the
     probability matrices alone were previously recomputed on every
     ``quilt_sample_fast`` call.
+
+    The ``blk_*`` tail is the device-resident heavy path: every heavy ER
+    unit — R^2 heavy-heavy blocks plus 2 |W| R one-node strip cells per
+    direction — is a "uniform block" of ``rows x cols`` cells sharing one
+    scalar p.  One fixed-shape round of ``heavy_budget`` weighted proposals
+    (block ~ w_m = rows * cols * p_m, cell uniform within the block) +
+    per-cell exact-Bernoulli thinning (``blk_alpha``) + the segmented
+    node-pair dedup realizes all of them in a single jitted dispatch,
+    replacing the host numpy binomial.  ``heavy_budget`` is None when the
+    exact budget is unaffordable (host fallback) and 0 when there is no
+    heavy mass at all.
     """
 
     n: int
@@ -1266,6 +1316,15 @@ class SplitPlan(NamedTuple):
     p_wh: np.ndarray  # (|W|, R) light-source strip probabilities
     p_hw: np.ndarray  # (R, |W|) heavy-source strip probabilities
     light_plan: Optional[QuiltPlan]  # quilt plan of F[W] (None if W empty)
+    pool: Optional[jax.Array] = None  # (|cat| + |W|,) int32 node id pool
+    blk_rows: Optional[jax.Array] = None  # (M,) int32 rows per block
+    blk_cols: Optional[jax.Array] = None  # (M,) int32 cols per block
+    blk_src_base: Optional[jax.Array] = None  # (M,) int32 pool offset (rows)
+    blk_dst_base: Optional[jax.Array] = None  # (M,) int32 pool offset (cols)
+    blk_alpha: Optional[jax.Array] = None  # (M,) f32 per-cell accept prob
+    blk_cumw: Optional[jax.Array] = None  # (M,) f64 normalized cum weights
+    heavy_budget: Optional[int] = None  # proposals G; None -> host fallback
+    heavy_mean: float = 0.0  # S_h = expected heavy-part edges
 
     @property
     def R(self) -> int:
@@ -1354,16 +1413,95 @@ def build_split_plan(
         n=n, d=d, bprime=int(bprime), W=W, heavy_cfgs=heavy_cfgs,
         sizes=sizes, offs=offs, cat=cat, p_hh=p_hh, p_wh=p_wh, p_hw=p_hw,
         light_plan=light_plan,
+        **_heavy_device_state(n, W, sizes, offs, cat, p_hh, p_wh, p_hw),
     )
+
+
+def _heavy_device_state(n, W, sizes, offs, cat, p_hh, p_wh, p_hw) -> dict:
+    """Device-resident decode state for the heavy ER part of a SplitPlan.
+
+    Flattens every heavy unit into one list of M uniform blocks over a
+    shared node-id ``pool = [cat ‖ W]``: heavy-heavy block (a, b) spans
+    ``sizes[a] x sizes[b]`` cells at pool offsets ``(offs[a], offs[b])``;
+    light->heavy strip cell (i, b) is a ``1 x sizes[b]`` block whose single
+    source row is pool slot ``|cat| + i`` (and transposed for
+    heavy->light).  Proposal weights ``w_m = rows * cols * p_m`` make the
+    per-CELL proposal law exactly ``p_m / S_h`` — a plan constant — so the
+    exact-cell acceptance ``alpha_m = p_m / (1 - (1 - p_m/S_h)^G)`` is
+    precomputed per block, and the sampling round needs no probability
+    math at all.  All arrays are device-put at build time (the warm path
+    ships nothing under ``transfer_guard("disallow")``); ``blk_cumw`` is
+    f64 (placed under ``enable_x64``) because block selection by
+    searchsorted over up to ~1e5 blocks needs more than f32's 2^-24 grid.
+    """
+    R = int(sizes.size)
+    if R == 0:
+        return {}
+    C = int(cat.size)
+    s64 = sizes.astype(np.int64)
+    rows = [np.repeat(s64, R)]
+    cols = [np.tile(s64, R)]
+    src_base = [np.repeat(offs, R)]
+    dst_base = [np.tile(offs, R)]
+    probs = [p_hh.reshape(-1).astype(np.float64)]
+    if W.size:
+        wi = np.arange(W.size, dtype=np.int64)
+        ones = np.ones(W.size * R, dtype=np.int64)
+        # light -> heavy: one (1 x sizes[b]) block per (i, b), row-major
+        rows.append(ones)
+        cols.append(np.tile(s64, W.size))
+        src_base.append(C + np.repeat(wi, R))
+        dst_base.append(np.tile(offs, W.size))
+        probs.append(p_wh.reshape(-1).astype(np.float64))
+        # heavy -> light: one (sizes[b] x 1) block per (i, b)
+        rows.append(np.tile(s64, W.size))
+        cols.append(ones)
+        src_base.append(np.tile(offs, W.size))
+        dst_base.append(C + np.repeat(wi, R))
+        probs.append(p_hw.T.reshape(-1).astype(np.float64))
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    src_base = np.concatenate(src_base)
+    dst_base = np.concatenate(dst_base)
+    probs = np.concatenate(probs)
+    w = rows.astype(np.float64) * cols.astype(np.float64) * probs
+    s_h = float(w.sum())
+    if s_h <= 0.0:
+        return {"heavy_budget": 0, "heavy_mean": 0.0}
+    budget = _exact_budget(float(probs.max()), s_h)
+    if budget is None or budget > kpgm.DEVICE_MAX_CANDIDATES:
+        return {"heavy_mean": s_h}  # heavy_budget None: host fallback
+    pi = np.minimum(probs / s_h, 1.0 - 1e-12)
+    q = -np.expm1(float(budget) * np.log1p(-pi))
+    alpha = np.where(q > 0.0, np.minimum(probs / q, 1.0), 0.0)
+    cumw = np.cumsum(w) / s_h
+    cumw[-1] = 1.0
+    pool = np.concatenate([cat, W]).astype(np.int32)
+    with enable_x64():
+        state = {
+            "pool": jax.device_put(pool),
+            "blk_rows": jax.device_put(rows.astype(np.int32)),
+            "blk_cols": jax.device_put(cols.astype(np.int32)),
+            "blk_src_base": jax.device_put(src_base.astype(np.int32)),
+            "blk_dst_base": jax.device_put(dst_base.astype(np.int32)),
+            "blk_alpha": jax.device_put(alpha.astype(np.float32)),
+            "blk_cumw": jax.device_put(cumw),
+        }
+    state["heavy_budget"] = int(budget)
+    state["heavy_mean"] = s_h
+    return state
 
 
 def rng_from_key(key: jax.Array) -> np.random.Generator:
     """Deterministic numpy Generator derived from a JAX PRNG key.
 
-    The Section-5 split sampler draws its Erdos-Renyi blocks with numpy
-    (binomial counts + distinct-cell placement); deriving the generator
-    from the SAME key that drives the quilted light part gives the sampler
-    the one-key contract of every other entry point.
+    The Section-5 split sampler's heavy ER blocks are device-resident now
+    (:func:`_split_heavy_body`); this router remains for the two paths that
+    still draw them with numpy — the deprecated ``quilt_sample_fast(seed=)``
+    alias (which pins the old host binomial stream) and the
+    ``heavy_budget is None`` fallback when the exact proposal budget would
+    exceed ``DEVICE_MAX_CANDIDATES``.  Deriving the generator from the SAME
+    key that drives the quilted light part keeps the one-key contract.
 
     Raw ``PRNGKey`` uint32 arrays are canonicalized to typed keys up front,
     so both representations of the same key run the identical fold + data
@@ -1386,10 +1524,107 @@ def _fold_key_data(key: jax.Array) -> jax.Array:
     return jax.random.key_data(jax.random.fold_in(key, 0x5EED))
 
 
+def _node_bits(n: int) -> int:
+    """Bits needed to pack a node id of [0, n) (same as balldrop's)."""
+    return max(int(n - 1).bit_length(), 1) if n > 1 else 1
+
+
+def _split_heavy_body(
+    hkey: jax.Array,
+    pool: jax.Array,
+    blk_rows: jax.Array,
+    blk_cols: jax.Array,
+    blk_src_base: jax.Array,
+    blk_dst_base: jax.Array,
+    blk_alpha: jax.Array,
+    blk_cumw: jax.Array,
+    *,
+    budget: int,
+    node_bits: int,
+):
+    """One fixed-shape device round realizing ALL heavy ER units at once.
+
+    Proposal s picks block m ~ blk_cumw by a 48-bit counter uniform (two
+    hash channels — f32's 24 bits would quantize the block law over ~1e5
+    strip cells), then a uniform cell within the block from two more
+    channels.  The per-cell proposal probability is exactly
+    ``p_m / heavy_mean`` by the ``rows * cols * p`` weighting, so the
+    precomputed ``blk_alpha`` thinning makes every CELL (= node pair; the
+    accept hash is keyed by the packed pair) exactly Bernoulli(p_m), and
+    the segmented node-pair dedup emits each accepted cell once — the same
+    exact-cell contract as the quilt/balldrop engines.  Call under
+    ``dedup.call_x64`` (uint64/f64 inside).
+    """
+    seed = ops.counter_seed(hkey)
+    s0, s1 = seed[0, 0], seed[0, 1]
+    gid0 = jnp.int32(0)
+    base = jnp.arange(budget, dtype=jnp.uint32) * jnp.uint32(
+        ops.PRNG_CHANNELS
+    )
+    hi = ops.counter_hash(s0, s1, gid0, base).astype(jnp.uint64)
+    lo = ops.counter_hash(s0, s1, gid0, base + jnp.uint32(1)).astype(
+        jnp.uint64
+    )
+    u_blk = (hi >> jnp.uint64(8)).astype(jnp.float64) * (2.0**-24) + (
+        lo >> jnp.uint64(8)
+    ).astype(jnp.float64) * (2.0**-48)
+    m = jnp.clip(
+        jnp.searchsorted(blk_cumw, u_blk, side="right"),
+        0,
+        blk_cumw.shape[0] - 1,
+    ).astype(jnp.int32)
+    rows = blk_rows[m]
+    cols = blk_cols[m]
+    u_r = ops.counter_u01(s0, s1, gid0, base + jnp.uint32(2))
+    u_c = ops.counter_u01(s0, s1, gid0, base + jnp.uint32(3))
+    r = jnp.minimum(
+        (u_r * rows.astype(jnp.float32)).astype(jnp.int32), rows - 1
+    )
+    c = jnp.minimum(
+        (u_c * cols.astype(jnp.float32)).astype(jnp.int32), cols - 1
+    )
+    src = pool[blk_src_base[m] + r]
+    dst = pool[blk_dst_base[m] + c]
+    # heavy/light node sets are disjoint and blocks tile disjoint pair
+    # rectangles, so the packed node pair uniquely identifies the cell —
+    # duplicates of one cell share one accept bit (cell-as-a-unit thinning)
+    pair = src.astype(jnp.int64) * jnp.int64(1 << node_bits) + dst.astype(
+        jnp.int64
+    )
+    salt = jax.random.bits(
+        jax.random.fold_in(hkey, 0x5EED), (), jnp.uint64
+    )
+    accept = _accept_u01(salt, gid0, pair) < blk_alpha[m]
+    local = jnp.zeros(budget, dtype=jnp.int32)
+    cum_asks = jnp.array([budget], dtype=jnp.int32)
+    targets = jnp.array([budget], dtype=jnp.int64)
+    take, _ = dedup.segmented_unique_mask(
+        local, src, dst, cum_asks, targets,
+        node_bits=node_bits, valid=accept,
+    )
+    return src, dst, take
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_split_heavy(jit_budget: int, jit_node_bits: int):
+    """Jit one heavy-round program per (budget, node_bits) — both plan
+    constants, so warm split sessions never recompile (sanitizer-pinned).
+
+    The parameter names are deliberately NOT ``budget``/``node_bits``: the
+    lint call graph follows straight-line name aliases into ``jax.jit``
+    arguments, and those generic names alias to unrelated host-side
+    assignments elsewhere in this module."""
+    return jax.jit(
+        functools.partial(
+            _split_heavy_body, budget=jit_budget, node_bits=jit_node_bits
+        )
+    )
+
+
 def split_run(
     key: jax.Array,
     sp: SplitPlan,
-    rng: np.random.Generator,
+    rng: Optional[np.random.Generator] = None,
     *,
     max_rounds: int = 8,
     oversample: float = 1.05,
@@ -1399,14 +1634,23 @@ def split_run(
 ) -> Tuple[np.ndarray, QuiltStats]:
     """Execute the Section-5 split sampler for a prebuilt :class:`SplitPlan`.
 
-    Quilts the light-light subgraph through :func:`quilt_run` and draws the
-    heavy blocks / strips as scalar-p Erdos-Renyi pieces from ``rng``
-    (the ball-dropping regime of Moreno et al., arXiv:1202.6001)."""
+    Quilts the light-light subgraph through :func:`quilt_run` and realizes
+    the heavy blocks / strips (the ball-dropping regime of Moreno et al.,
+    arXiv:1202.6001) in ONE jitted device round (:func:`_split_heavy_body`)
+    keyed by a sibling split of ``key`` — the whole sampler is
+    device-resident and zero-transfer when warm.  ``rng`` is the legacy
+    escape hatch: passing a numpy Generator draws the heavy part with the
+    old host binomial + distinct-cell placement (the deprecated
+    ``quilt_sample_fast(seed=)`` alias pins that stream), and the device
+    path falls back to it (derived via :func:`rng_from_key`) when
+    ``sp.heavy_budget`` is None (exact budget past DEVICE_MAX_CANDIDATES).
+    """
     W = sp.W
     R = sp.R
     pieces = []
     stats_b = 0
     draws = kp_total = 0
+    key, hkey = jax.random.split(key)
 
     # (1) light x light: quilt the W-subgraph (configs unchanged; B <= B').
     if W.size:
@@ -1422,7 +1666,28 @@ def split_run(
         if ew.size:
             pieces.append(np.stack([W[ew[:, 0]], W[ew[:, 1]]], axis=1))
 
-    if R:
+    device_heavy = R > 0 and rng is None and sp.heavy_budget is not None
+    if device_heavy:
+        # (2+3) every heavy block and strip in one fixed-shape dispatch
+        if sp.heavy_budget > 0:
+            fn = _compiled_split_heavy(
+                sp.heavy_budget, _node_bits(sp.n)
+            )
+            src, dst, take = dedup.call_x64(
+                fn, hkey, sp.pool, sp.blk_rows, sp.blk_cols,
+                sp.blk_src_base, sp.blk_dst_base, sp.blk_alpha,
+                sp.blk_cumw,
+            )
+            keep = jax.device_get(take)
+            if keep.any():
+                sn = jax.device_get(src)[keep]
+                dn = jax.device_get(dst)[keep]
+                pieces.append(
+                    np.stack([sn, dn], axis=1).astype(np.int64)
+                )
+    elif R:
+        if rng is None:
+            rng = rng_from_key(key)
         sizes, offs, cat = sp.sizes, sp.offs, sp.cat
         # (2) heavy x heavy blocks (including the diagonal): scalar-p ER
         # blocks, all R^2 at once — one batched binomial for the counts and
@@ -1500,17 +1765,17 @@ def quilt_sample_fast(
     ``bprime=None`` minimises the paper's cost model T(B') via
     :func:`choose_bprime`.
 
-    The whole draw is now keyed by ``key`` alone (the numpy generator for
-    the ER blocks derives from it via :func:`rng_from_key`), matching every
-    other sampler.  ``seed=`` survives one release as a deprecated alias
-    that pins the old numpy stream.  Pinned bit-identical by test to
-    ``MAGMSampler(SamplerConfig(..., split=True)).sample(key)``.
+    The whole draw is keyed by ``key`` alone and the heavy ER part runs
+    device-resident (:func:`_split_heavy_body`), matching every other
+    sampler.  ``seed=`` survives one release as a deprecated alias that
+    pins the old host numpy binomial stream.  Pinned bit-identical by test
+    to ``MAGMSampler(SamplerConfig(..., split=True)).sample(key)``.
     """
     _warn_shim(
         "quilt_sample_fast", "repro.api.MAGMSampler (SamplerConfig split=True)"
     )
     if seed is _SEED_UNSET:
-        rng = rng_from_key(key)
+        rng = None
     else:
         warnings.warn(
             "quilt_sample_fast(seed=...) is deprecated: omit it and the "

@@ -21,6 +21,21 @@ from repro.kernels import quadrant_descent as _qd
 # CPU containers (this environment) must interpret; set False on real TPU.
 INTERPRET = jax.default_backend() != "tpu"
 
+# Opt-in for the hardware-PRNG kernel variant (pltpu.prng_random_bits) on a
+# real TPU; the default counter-hash kernels are portable AND bit-identical
+# to the jnp fallback, so they stay the default even on TPU.
+TPU_NATIVE_PRNG = False
+
+# counter-PRNG derivation helpers, re-exported for the core engines so the
+# jnp fallback paths share the kernels' exact integer math (bit-identity)
+PRNG_CHANNELS = _qd.PRNG_CHANNELS
+counter_seed = _qd.counter_seed
+counter_hash = _qd.counter_hash
+counter_u01 = _qd.counter_u01
+counter_rank = _qd.counter_rank
+descent_uniforms = _qd.descent_uniforms
+rank_pair = _qd.rank_pair
+
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
     size = x.shape[axis]
@@ -42,6 +57,37 @@ def sample_edge_batch_pallas(
     padded = num_edges + ((-num_edges) % _qd.TILE)
     u = jax.random.uniform(key, (padded, d))
     src, dst = _qd.quadrant_descent(u, cum, interpret=INTERPRET)
+    return src[:num_edges], dst[:num_edges]
+
+
+def sample_edge_batch_prng(
+    key: jax.Array,
+    thetas: jax.Array,
+    num_edges: int,
+    *,
+    tpu_native: bool = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Counter-PRNG Algorithm-1 batch: no HBM uniforms operand at all.
+
+    Same law as :func:`sample_edge_batch_pallas` (chi-square + 3-sigma
+    validated, NOT bit-compatible with the threefry uniform stream).
+    ``tpu_native=None`` follows the module flag ``TPU_NATIVE_PRNG``;
+    explicitly passing True on a CPU backend raises (no interpret lowering
+    for pltpu.prng_random_bits).
+    """
+    d = thetas.shape[0]
+    flat = thetas.reshape(-1, 4)
+    cum = jnp.cumsum(flat / jnp.sum(flat, axis=1, keepdims=True), axis=1)
+    padded = num_edges + ((-num_edges) % _qd.TILE)
+    if tpu_native is None:
+        tpu_native = TPU_NATIVE_PRNG and not INTERPRET
+    src, dst = _qd.quadrant_descent_prng(
+        _qd.counter_seed(key),
+        cum,
+        num_slots=padded,
+        interpret=INTERPRET,
+        tpu_native=tpu_native,
+    )
     return src[:num_edges], dst[:num_edges]
 
 
@@ -70,6 +116,39 @@ def quilt_descent_lookup_pallas(
         u, cumprobs, kb2, lb2, table_cfg, table_node, interpret=INTERPRET
     )
     return scfg[:n], dcfg[:n], snode[:n], dnode[:n]
+
+
+def quilt_prng_descent_lookup_pallas(
+    seed: jax.Array,
+    gids: jax.Array,
+    cumprobs: jax.Array,
+    table_cfg: jax.Array,
+    table_node: jax.Array,
+    *,
+    a_tot: int,
+    num_blocks: int,
+    ranks: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Counter-PRNG fused descent + lookup (quilt/balldrop kernel path).
+
+    Unlike :func:`quilt_descent_lookup_pallas` there is no per-candidate
+    HBM operand to pad: the kernel derives (graph, slot, uniforms, block
+    pair) from its row index, the (1, 2) seed and the (gc,) graph ids, and
+    the wrapper slices the TILE padding off internally.  Bit-identical to
+    the jnp fallback assembled from :func:`descent_uniforms` /
+    :func:`rank_pair` (the kernel path/jnp path parity test relies on it).
+    """
+    return _qd.quilt_prng_descent_lookup(
+        seed,
+        gids,
+        cumprobs,
+        table_cfg,
+        table_node,
+        a_tot=a_tot,
+        num_blocks=num_blocks,
+        ranks=ranks,
+        interpret=INTERPRET,
+    )
 
 
 def _packed_bilinear(thetas: jax.Array, d_pad: int):

@@ -17,11 +17,16 @@ blocks.  Arithmetic intensity is ~O(d) flops / 4d bytes per edge — the kernel
 is HBM-bandwidth-bound, which is why the fused formulation (no intermediate
 quad / bit-plane tensors round-tripping to HBM) matters.
 
-On a real TPU the uniforms would be generated in-kernel with
-``pltpu.prng_seed`` / ``pltpu.prng_random_bits`` (removing the dominant HBM
-read entirely); interpret mode has no CPU lowering for those primitives, so
-the uniforms are an explicit input and the PRNG fusion is left as the
-documented deployment configuration (see EXPERIMENTS.md section Perf).
+The uniforms operand is now OPTIONAL: the ``*_prng`` kernel variants below
+generate their variates in-kernel from a counter-based hash of
+``(round_key, graph, slot, channel)`` (`counter_hash`), removing the
+dominant HBM read entirely.  The hash is plain uint32 arithmetic, so the
+same kernel body lowers on CPU interpret mode AND on TPU, and the jnp
+fallback paths (``core/quilt.py`` / ``core/balldrop.py`` with
+``use_kernel=False``) reproduce it bit-for-bit.  A TPU-native variant using
+``pltpu.prng_seed`` / ``pltpu.prng_random_bits`` sits behind the
+``tpu_native`` flag (no CPU lowering exists for those primitives; see
+docs/API.md for the flag + counter-derivation contract).
 """
 
 from __future__ import annotations
@@ -210,3 +215,371 @@ def quadrant_descent(
         interpret=interpret,
     )(uniforms, cumprobs)
     return src[:, 0], dst[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# counter-based in-kernel PRNG
+# ---------------------------------------------------------------------------
+
+# Channel slots reserved per candidate: channels 0..d-1 carry the descent
+# uniforms (d <= 31 everywhere: int32 config ids), the LAST TWO channels
+# carry the ball-dropping block ranks.  64 = 2^6 keeps the packed word
+# ``slot * 64 + channel`` inside uint32 for every slot the device budget
+# admits (slot < DEVICE_MAX_CANDIDATES = 2^25, so word < 2^31 + 64).
+PRNG_CHANNELS = 64
+_RANK0 = PRNG_CHANNELS - 2
+
+# lowbias32-style avalanche multipliers (hash-prospector family) plus the
+# word/graph stream-separation multipliers (golden-ratio, murmur3 c2)
+_MIX_A = 0x7FEB352D
+_MIX_B = 0x846CA68B
+_WORD_C = 0x9E3779B9
+_GID_C = 0x85EBCA6B
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """lowbias32 finalizer: an invertible uint32 avalanche round.
+
+    Pure uint32 jnp arithmetic (multiply wraps mod 2^32, ``>>`` on an
+    unsigned dtype is a logical shift), so the SAME expression runs inside
+    a Pallas kernel body, in interpret mode, and on the jnp fallback paths
+    — bit-identical everywhere, no x64 requirement.
+    """
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_MIX_A)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(_MIX_B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def counter_hash(
+    s0: jax.Array, s1: jax.Array, gid: jax.Array, word: jax.Array
+) -> jax.Array:
+    """uint32 hash of the counter ``(seed words, graph id, word)``.
+
+    The counter-derivation contract (docs/API.md): ``word`` packs the
+    intra-graph position as ``slot * PRNG_CHANNELS + channel`` where
+    ``slot`` is the candidate's absolute index in the graph's concatenated
+    candidate stream — NOT its index within the current round — so a
+    top-up round re-deriving slots ``[0, a_tot)`` reproduces the earlier
+    rounds' variates as an exact prefix, and any sharding of the graph
+    axis sees identical per-graph streams (mesh-layout invariance by
+    construction: the seed is replicated, ``gid`` is the GLOBAL graph id).
+    Two avalanche rounds with the seed/graph words injected between them
+    decorrelate neighbouring counters to chi-square-clean uniformity
+    (tests/test_counter_prng.py).
+    """
+    x = word.astype(jnp.uint32) * jnp.uint32(_WORD_C) + s0.astype(jnp.uint32)
+    x = _mix32(x)
+    x = x ^ (gid.astype(jnp.uint32) * jnp.uint32(_GID_C) + s1.astype(jnp.uint32))
+    return _mix32(x)
+
+
+def counter_u01(
+    s0: jax.Array, s1: jax.Array, gid: jax.Array, word: jax.Array
+) -> jax.Array:
+    """f32 uniform in [0, 1) from the top 24 bits of :func:`counter_hash`
+    (24 bits = full f32 mantissa precision, exact float conversion)."""
+    bits = counter_hash(s0, s1, gid, word) >> jnp.uint32(8)
+    return bits.astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def counter_rank(
+    s0: jax.Array,
+    s1: jax.Array,
+    gid: jax.Array,
+    word: jax.Array,
+    num_blocks: int,
+) -> jax.Array:
+    """int32 rank in [0, num_blocks) from 31 hash bits (modulo bias is
+    <= num_blocks * 2^-31 per bucket — B never exceeds n <= 2^25)."""
+    bits = counter_hash(s0, s1, gid, word) >> jnp.uint32(1)
+    return (bits % jnp.uint32(num_blocks)).astype(jnp.int32)
+
+
+def counter_seed(key: jax.Array) -> jax.Array:
+    """(1, 2) int32 seed words for the counter hash from a JAX PRNG key
+    (typed or raw uint32).  Traceable — derived in-jit, so warm calls ship
+    no host scalars (transfer-guard clean)."""
+    arr = jnp.asarray(key)
+    if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        arr = jax.random.key_data(arr)
+    words = arr.astype(jnp.uint32).reshape(-1)[-2:]
+    return words.astype(jnp.int32).reshape(1, 2)
+
+
+def descent_uniforms(
+    s0: jax.Array, s1: jax.Array, gid: jax.Array, slot: jax.Array, d: int
+) -> jax.Array:
+    """(N, d) f32 descent uniforms for channels 0..d-1 of each slot — the
+    jnp twin of the in-kernel derivation (bit-identical by shared math)."""
+    word = slot.astype(jnp.uint32).reshape(-1, 1) * jnp.uint32(
+        PRNG_CHANNELS
+    ) + jnp.arange(d, dtype=jnp.uint32)[None, :]
+    return counter_u01(s0, s1, gid.reshape(-1, 1), word)
+
+
+def rank_pair(
+    s0: jax.Array,
+    s1: jax.Array,
+    gid: jax.Array,
+    slot: jax.Array,
+    num_blocks: int,
+):
+    """(kb, lb) block ranks from the two reserved rank channels — the jnp
+    twin of the in-kernel ``ranks=True`` derivation."""
+    base = slot.astype(jnp.uint32) * jnp.uint32(PRNG_CHANNELS)
+    kb = counter_rank(s0, s1, gid, base + jnp.uint32(_RANK0), num_blocks)
+    lb = counter_rank(s0, s1, gid, base + jnp.uint32(_RANK0 + 1), num_blocks)
+    return kb, lb
+
+
+def _descend_body(u, cum, d: int):
+    """Shared descent arithmetic: (TILE, d) uniforms -> (TILE, 1) cfg ids."""
+    quad = (
+        (u >= cum[None, :, 0]).astype(jnp.int32)
+        + (u >= cum[None, :, 1]).astype(jnp.int32)
+        + (u >= cum[None, :, 2]).astype(jnp.int32)
+    )
+    a = quad >> 1
+    b = quad & 1
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
+    pows = jnp.int32(1) << (jnp.int32(d - 1) - k)
+    scfg = jnp.sum(a * pows, axis=1, keepdims=True, dtype=jnp.int32)
+    dcfg = jnp.sum(b * pows, axis=1, keepdims=True, dtype=jnp.int32)
+    return scfg, dcfg
+
+
+def _prng_kernel(seed_ref, cum_ref, src_ref, dst_ref, *, d: int):
+    """Quadrant descent with in-kernel counter-PRNG uniforms: the ONLY
+    HBM inputs are the (1, 2) seed and the (d, 4) table."""
+    cum = cum_ref[...]
+    i = pl.program_id(0)
+    row = i * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, 1), 0)
+    k = jax.lax.broadcasted_iota(jnp.uint32, (1, d), 1)
+    word = row.astype(jnp.uint32) * jnp.uint32(PRNG_CHANNELS) + k
+    s = seed_ref[...]
+    u = counter_u01(s[0, 0], s[0, 1], jnp.int32(0), word)
+    src, dst = _descend_body(u, cum, d)
+    src_ref[...] = src
+    dst_ref[...] = dst
+
+
+def _prng_native_kernel(seed_ref, cum_ref, src_ref, dst_ref, *, d: int):
+    """TPU-native variant: hardware PRNG via ``pltpu.prng_random_bits``
+    seeded per grid step.  No CPU interpret lowering exists — gated behind
+    ``tpu_native=True`` in the wrappers.  NOT bit-compatible with the
+    counter hash (a deployment-speed configuration, statistically
+    equivalent; the 3-sigma suite is the contract either way)."""
+    from jax.experimental.pallas import tpu as pltpu  # lazy: TPU-only
+
+    cum = cum_ref[...]
+    s = seed_ref[...]
+    pltpu.prng_seed(s[0, 0] + pl.program_id(0), s[0, 1])
+    bits = pltpu.prng_random_bits((TILE, d)).astype(jnp.uint32)
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    src, dst = _descend_body(u, cum, d)
+    src_ref[...] = src
+    dst_ref[...] = dst
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_slots", "interpret", "tpu_native")
+)
+def quadrant_descent_prng(
+    seed: jax.Array,
+    cumprobs: jax.Array,
+    *,
+    num_slots: int,
+    interpret: bool = True,
+    tpu_native: bool = False,
+):
+    """Counter-PRNG quadrant descent: (1, 2) seed words + (d, 4) cumulative
+    probs -> (src, dst) int32 ids for ``num_slots`` candidates (a multiple
+    of TILE; ops.py pads).  Candidate ``s`` draws its level-``k`` uniform
+    from ``counter_u01(seed, gid=0, s * PRNG_CHANNELS + k)``."""
+    if num_slots % TILE:
+        raise ValueError(f"N={num_slots} must be a multiple of TILE={TILE}")
+    if tpu_native and interpret:
+        raise ValueError(
+            "tpu_native=True uses pltpu.prng_random_bits, which has no CPU "
+            "interpret lowering — run on a real TPU backend or use the "
+            "portable counter-hash kernel (tpu_native=False)"
+        )
+    d = cumprobs.shape[0]
+    body = _prng_native_kernel if tpu_native else _prng_kernel
+    grid = (num_slots // TILE,)
+    src, dst = pl.pallas_call(
+        functools.partial(body, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((d, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_slots, 1), jnp.int32),
+            jax.ShapeDtypeStruct((num_slots, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seed, cumprobs)
+    return src[:, 0], dst[:, 0]
+
+
+def _prng_quilt_kernel(
+    seed_ref,
+    gids_ref,
+    cum_ref,
+    tcfg_ref,
+    tnode_ref,
+    scfg_ref,
+    dcfg_ref,
+    snode_ref,
+    dnode_ref,
+    *,
+    d: int,
+    table_width: int,
+    steps: int,
+    a_tot: int,
+    num_blocks: int,
+    ranks: bool,
+):
+    """Fused counter-PRNG descent + per-block sorted-config lookup.
+
+    Everything the HBM-uniform ``_quilt_kernel`` read per candidate —
+    (TILE, d) uniforms plus (TILE, 1) kb/lb arrays — is derived in-kernel:
+    the grid step reconstructs each row's (graph, slot) from its global row
+    index, hashes the counter for the descent uniforms, and decodes the
+    block pair either from the graph id (quilting: gid mod B^2) or from the
+    two reserved rank channels (``ranks=True``, ball dropping).  HBM inputs
+    shrink to the seed, the per-shard graph ids, and the plan constants.
+    """
+    cum = cum_ref[...]
+    s = seed_ref[...]
+    s0, s1 = s[0, 0], s[0, 1]
+    gc = gids_ref.shape[0]
+    i = pl.program_id(0)
+    row = i * TILE + jax.lax.broadcasted_iota(jnp.int32, (TILE, 1), 0)
+    # rows past gc * a_tot (TILE padding) clamp to the last graph; the
+    # wrapper slices them off
+    local = jnp.minimum(row // jnp.int32(a_tot), jnp.int32(gc - 1))
+    slot = row - local * jnp.int32(a_tot)
+    flat_g = gids_ref[...].reshape(-1)
+    gid = flat_g[local]  # (TILE, 1) global graph ids
+    k = jax.lax.broadcasted_iota(jnp.uint32, (1, d), 1)
+    base = slot.astype(jnp.uint32) * jnp.uint32(PRNG_CHANNELS)
+    u = counter_u01(s0, s1, gid, base + k)
+    scfg, dcfg = _descend_body(u, cum, d)
+
+    if ranks:
+        kb = counter_rank(s0, s1, gid, base + jnp.uint32(_RANK0), num_blocks)
+        lb = counter_rank(
+            s0, s1, gid, base + jnp.uint32(_RANK0 + 1), num_blocks
+        )
+    else:
+        blk = gid % jnp.int32(num_blocks * num_blocks)
+        kb = blk // jnp.int32(num_blocks)
+        lb = blk - kb * jnp.int32(num_blocks)
+
+    flat_cfg = tcfg_ref[...].reshape(-1)  # (B * L,)
+    flat_node = tnode_ref[...].reshape(-1)
+    length = jnp.int32(table_width)
+
+    def lower_bound(row_, target):
+        lo = jnp.zeros_like(target)
+        hi = jnp.full_like(target, length)
+        for _ in range(steps):
+            mid = (lo + hi) >> 1
+            probe = flat_cfg[row_ * length + jnp.minimum(mid, length - 1)]
+            active = lo < hi
+            go_right = active & (probe < target)
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        pos = jnp.minimum(lo, length - 1)
+        hit = flat_cfg[row_ * length + pos] == target
+        return jnp.where(hit, flat_node[row_ * length + pos], -1)
+
+    snode_ref[...] = lower_bound(kb, scfg)
+    dnode_ref[...] = lower_bound(lb, dcfg)
+    scfg_ref[...] = scfg
+    dcfg_ref[...] = dcfg
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("a_tot", "num_blocks", "ranks", "interpret"),
+)
+def quilt_prng_descent_lookup(
+    seed: jax.Array,
+    gids: jax.Array,
+    cumprobs: jax.Array,
+    table_cfg: jax.Array,
+    table_node: jax.Array,
+    *,
+    a_tot: int,
+    num_blocks: int,
+    ranks: bool = False,
+    interpret: bool = True,
+):
+    """Counter-PRNG fused descent + lookup over ``gids.size * a_tot`` rows.
+
+    Args:
+      seed:       (1, 2) int32 counter seed words (:func:`counter_seed`).
+      gids:       (gc,) or (gc, 1) int32 GLOBAL graph ids of this shard.
+      cumprobs:   (d, 4) cumulative quadrant probabilities.
+      table_cfg:  (B, L) sorted per-block configs (sentinel-padded).
+      table_node: (B, L) aligned node ids (padding -1).
+      a_tot:      static slots per graph (cumulative over top-up rounds).
+      num_blocks: B — block-pair decode modulus (quilting) or rank range
+                  (``ranks=True``, ball dropping).
+
+    Returns (src_cfg, dst_cfg, src_node, dst_node), each (gc * a_tot,)
+    int32, bit-identical to the jnp fallback built from
+    :func:`descent_uniforms` / :func:`rank_pair`.
+    """
+    gc = int(gids.shape[0])
+    n = gc * a_tot
+    n_pad = n + (-n) % TILE
+    bsz, width = table_cfg.shape
+    steps = max(width - 1, 1).bit_length() + 1
+    d = cumprobs.shape[0]
+    grid = (max(n_pad // TILE, 1),)
+    n_pad = grid[0] * TILE
+    out = pl.pallas_call(
+        functools.partial(
+            _prng_quilt_kernel,
+            d=d,
+            table_width=width,
+            steps=steps,
+            a_tot=a_tot,
+            num_blocks=num_blocks,
+            ranks=ranks,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((gc, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, 4), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, width), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, width), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 1), lambda i: (i, 0)) for _ in range(4)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.int32) for _ in range(4)
+        ],
+        interpret=interpret,
+    )(
+        seed,
+        gids.reshape(gc, 1).astype(jnp.int32),
+        cumprobs,
+        table_cfg,
+        table_node,
+    )
+    scfg, dcfg, snode, dnode = out
+    return scfg[:n, 0], dcfg[:n, 0], snode[:n, 0], dnode[:n, 0]

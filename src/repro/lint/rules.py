@@ -41,6 +41,14 @@ _KEY_CONSUMERS = {
     "loggamma", "rademacher", "maxwell",
 }
 
+# counter-PRNG derivations that consume a key the same way a draw does:
+# counter_seed(key) pins the ENTIRE counter stream of that key (every
+# (graph, slot, channel) uniform), so feeding the same key to another
+# consumer afterwards overlays two streams on one key.  Matched by simple
+# name regardless of root — the idiom appears as ops.counter_seed,
+# quilt-local imports, and the kernels module itself.
+_COUNTER_CONSUMERS = {"counter_seed"}
+
 _INT_WIDTHS = {
     "int64": 63, "uint64": 64, "int32": 31, "uint32": 32,
     "int16": 15, "uint16": 16, "int8": 7, "uint8": 8,
@@ -224,11 +232,12 @@ class PrngKeyDiscipline(Rule):
 
     (a) the same key variable consumed by two draws in one straight-line
     block without an interleaving ``split``/``fold_in`` reuses the stream
-    (identical or correlated variates); (b) ``PRNGKey(<constant>)`` inside
-    library code hard-wires determinism callers cannot see; (c) jax keys
-    fed raw into numpy RNG constructors bypass ``rng_from_key``'s
-    canonicalization (uint32 words of a key are NOT a well-mixed numpy
-    seed).
+    (identical or correlated variates) — ``counter_seed(key)`` counts as
+    a draw here, since it pins the key's whole counter-PRNG stream;
+    (b) ``PRNGKey(<constant>)`` inside library code hard-wires
+    determinism callers cannot see; (c) jax keys fed raw into numpy RNG
+    constructors bypass ``rng_from_key``'s canonicalization (uint32 words
+    of a key are NOT a well-mixed numpy seed).
     """
 
     name = "prng-key-discipline"
@@ -328,14 +337,17 @@ class PrngKeyDiscipline(Rule):
                     continue
             draws: List[Tuple[str, ast.Call]] = []
             for node in ast.walk(stmt):
-                if (
+                if not (
                     isinstance(node, ast.Call)
-                    and _last(node.func) in _KEY_CONSUMERS
-                    and _root_name(node.func)
-                    in ("jax", "random", "jrandom", "jr")
                     and node.args
                     and isinstance(node.args[0], ast.Name)
                 ):
+                    continue
+                name = _last(node.func)
+                is_draw = name in _KEY_CONSUMERS and _root_name(
+                    node.func
+                ) in ("jax", "random", "jrandom", "jr")
+                if is_draw or name in _COUNTER_CONSUMERS:
                     draws.append((node.args[0].id, node))
             draws.sort(key=lambda kn: (kn[1].lineno, kn[1].col_offset))
             for key_name, node in draws:

@@ -209,6 +209,38 @@ def test_prng_positive_raw_key_to_numpy():
     assert "prng-key-discipline" in _rules(src)
 
 
+def test_prng_positive_counter_seed_then_draw():
+    # counter_seed(key) pins the key's whole counter stream — drawing from
+    # the same key afterwards overlays the threefry stream on top of it
+    src = """
+    import jax
+    from repro.kernels import ops
+
+    def f(key, shape):
+        seed = ops.counter_seed(key)
+        u = jax.random.uniform(key, shape)
+        return seed, u
+    """
+    assert "prng-key-discipline" in _rules(src)
+
+
+def test_prng_negative_counter_seed_after_split():
+    # the engine idiom: split first, derive the counter seed from one
+    # branch, draw (or fold_in-derive) from the other
+    src = """
+    import jax
+    from repro.kernels import ops
+
+    def f(key, shape):
+        key, rkey = jax.random.split(key)
+        seed = ops.counter_seed(rkey)
+        salt = jax.random.bits(jax.random.fold_in(rkey, 0x5EED), (), "uint32")
+        u = jax.random.uniform(key, shape)
+        return seed, salt, u
+    """
+    assert "prng-key-discipline" not in _rules(src)
+
+
 def test_prng_negative_rng_from_key_and_plain_seed():
     src = """
     import numpy as np

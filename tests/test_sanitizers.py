@@ -131,6 +131,29 @@ def test_zero_recompiles_warm_stream(warm_sampler):
     assert c.count == 0, f"warm stream recompiled: {c.names}"
 
 
+def test_split_hot_path_never_touches_host_binomial(monkeypatch):
+    """The §5 heavy round is device-resident: a warm split session keyed
+    from ``key`` alone must NEVER reach ``quilt.rng_from_key`` (the numpy
+    binomial host fallback).  Skewed mu guarantees real heavy mass
+    (R > 0, device budget admitted), so a pass here means the heavy
+    blocks truly ran as fixed-shape device rounds."""
+    params = magm.make_params(THETA, 0.75, D)
+    F = np.asarray(
+        magm.sample_attributes(jax.random.PRNGKey(3), N, params.mu)
+    )
+    sampler = MAGMSampler(SamplerConfig(params=params, F=F, split=True))
+    sp = sampler.split_plan
+    assert sp.R > 0, "fixture must exercise the heavy groups"
+    assert sp.heavy_budget is not None and sp.heavy_budget > 0
+
+    def _boom(key):
+        raise AssertionError("rng_from_key called on the split hot path")
+
+    monkeypatch.setattr(quilt, "rng_from_key", _boom)
+    gs = sampler.sample(jax.random.PRNGKey(21))
+    assert gs.edges.shape[0] > 0
+
+
 def test_compile_counter_detects_compiles():
     """The counter itself must not be vacuous."""
 
